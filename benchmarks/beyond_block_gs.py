@@ -1,0 +1,22 @@
+"""Beyond-paper: block-Gauss-Seidel vs the paper-faithful Jacobi schedule —
+message and round reduction per graph (the §Perf-kcore hillclimb axis)."""
+
+from repro.core import KCoreConfig
+
+from benchmarks.common import csv_row, decompose
+
+GRAPHS = ("FC", "EEN", "G31", "CA", "WG", "S0811", "PTBR", "MGF")
+
+
+def run() -> list[str]:
+    rows = [csv_row("graph", "jacobi_msgs", "gs_msgs", "msg_reduction",
+                    "jacobi_rounds", "gs_rounds")]
+    for g in GRAPHS:
+        jac, _ = decompose(g)
+        gs, _ = decompose(g, KCoreConfig(mode="block_gs", n_blocks=16))
+        rows.append(csv_row(
+            g, jac.stats.total_messages, gs.stats.total_messages,
+            round(1 - gs.stats.total_messages /
+                  max(jac.stats.total_messages, 1), 3),
+            jac.rounds, gs.rounds))
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig 10: total running time. The paper itself warns wall-clock of
+the simulation is not a deployment proxy — we report the simulation wall
+time AND the message-complexity-derived simulated runtimes (cost_model)
+under three network regimes, which is the §V future-work item."""
+
+from repro.core.cost_model import DATACENTER, INTERNET, TPU_POD, \
+    simulate_runtime
+from repro.graph.generators import SNAP_TABLE
+
+from benchmarks.common import csv_row, decompose
+
+
+def run() -> list[str]:
+    rows = [csv_row("graph", "sim_wall_s", "internet_s", "datacenter_s",
+                    "tpu_pod_s", "latency_bound_frac_internet")]
+    for e in SNAP_TABLE:
+        res, wall = decompose(e.abbrev)
+        t_net = simulate_runtime(res.stats, INTERNET)
+        t_dc = simulate_runtime(res.stats, DATACENTER)
+        t_tpu = simulate_runtime(res.stats, TPU_POD)
+        rows.append(csv_row(
+            e.abbrev, round(wall, 3), round(t_net["total_s"], 4),
+            round(t_dc["total_s"], 6), round(t_tpu["total_s"], 6),
+            round(t_net["latency_bound_fraction"], 3)))
+    return rows

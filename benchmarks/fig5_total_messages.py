@@ -1,0 +1,20 @@
+"""Paper Fig 5: total passed messages per graph — larger graphs need more
+messages; totals bounded by the §II.B work bound W."""
+
+from repro.core import work_bound
+from repro.graph.generators import SNAP_TABLE
+
+from benchmarks.common import csv_row, decompose, graph_for
+
+
+def run() -> list[str]:
+    rows = [csv_row("graph", "n", "arcs", "total_messages", "work_bound",
+                    "messages_over_bound", "rounds")]
+    for e in SNAP_TABLE:
+        g = graph_for(e.abbrev)
+        res, _ = decompose(e.abbrev)
+        wb = work_bound(g, res.core)
+        rows.append(csv_row(
+            e.abbrev, g.n, g.num_arcs, res.stats.total_messages, wb,
+            round(res.stats.total_messages / max(wb, 1), 3), res.rounds))
+    return rows

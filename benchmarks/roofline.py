@@ -1,0 +1,79 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (one row per arch x shape x mesh) with the
+three terms, dominant bottleneck, MODEL_FLOPS and the useful-compute ratio.
+
+The dry-run must have been executed first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod1
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.registry import shape_by_name
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / \
+    "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6·N·D (dense train) / 6·N_active·D (MoE train);
+    2·N_active per decoded token; prefill = 2·N_active·D."""
+    cfg = get_config(arch)
+    shape = shape_by_name(arch, shape_name)
+    if cfg.family == "lm":
+        n_act = cfg.n_active_params
+        if shape.kind == "train":
+            D = shape.params["seq_len"] * shape.params["global_batch"]
+            return 6.0 * n_act * D
+        if shape.kind == "prefill":
+            D = shape.params["seq_len"] * shape.params["global_batch"]
+            return 2.0 * n_act * D
+        return 2.0 * n_act * shape.params["global_batch"]   # decode: 1 tok
+    if cfg.family == "gnn":
+        # per-edge message MLP + per-node update, x3 for fwd+bwd
+        p = shape.params
+        E = 2 * p.get("n_edges", p.get("batch", 1) * p.get("n_edges", 64))
+        d = cfg.d_hidden
+        return 3.0 * cfg.n_layers * (E * (6 * d * d) * 2)
+    # recsys: embedding + MLPs per example
+    cfgr = cfg
+    B = shape.params.get("batch", 1) * max(
+        shape.params.get("n_candidates", 1), 1)
+    mlp_flops = 0
+    dims = [8 * cfgr.embed_dim] + list(cfgr.mlp) + [1]
+    for a, b in zip(dims[:-1], dims[1:]):
+        mlp_flops += 2 * a * b
+    return float(B) * mlp_flops * (3.0 if shape.kind == "train" else 1.0)
+
+
+def run() -> list[str]:
+    rows = ["arch,shape,mesh,chips,compute_s,memory_s,collective_s,"
+            "dominant,bound_s,model_flops,hlo_flops,useful_ratio,"
+            "mem_per_dev_GB,fits_16GB"]
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "OK":
+            if d.get("status") == "SKIP":
+                rows.append(f"{d['arch']},{d['shape']},{d['mesh']},,,,,SKIP,"
+                            f",,,,,{d.get('reason', '')}")
+            continue
+        r = d["roofline"]
+        mem = d.get("memory", {})
+        live = mem.get("per_device_live_bytes", 0) / 1e9
+        try:
+            mf = model_flops(d["arch"], d["shape"]) if d["arch"] != "kcore" \
+                else 0.0
+        except Exception:
+            mf = 0.0
+        ratio = round(mf / r["flops"], 3) if r["flops"] and mf else ""
+        rows.append(",".join(str(x) for x in (
+            d["arch"], d["shape"], d["mesh"], d.get("chips", ""),
+            f"{r['compute_s']:.5f}", f"{r['memory_s']:.5f}",
+            f"{r['collective_s']:.5f}", r["dominant"],
+            f"{max(r['compute_s'], r['memory_s'], r['collective_s']):.5f}",
+            f"{mf:.3e}" if mf else "", f"{r['flops']:.3e}", ratio,
+            f"{live:.2f}", mem.get("fits_16GB", ""))))
+    return rows

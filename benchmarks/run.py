@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure (+ the beyond-paper
+and roofline reports). Prints CSV blocks per benchmark.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1 fig5
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = {
+    "table1": "benchmarks.table1_graphs",
+    "fig4": "benchmarks.fig4_core_distribution",
+    "fig5": "benchmarks.fig5_total_messages",
+    "fig67": "benchmarks.fig67_messages_over_time",
+    "fig89": "benchmarks.fig89_active_nodes",
+    "fig10": "benchmarks.fig10_runtime",
+    "beyond_gs": "benchmarks.beyond_block_gs",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def main() -> None:
+    import importlib
+    names = sys.argv[1:] or list(BENCHES)
+    for name in names:
+        mod = importlib.import_module(BENCHES[name])
+        t0 = time.perf_counter()
+        rows = mod.run()
+        dt = time.perf_counter() - t0
+        print(f"\n===== {name} ({BENCHES[name]}) [{dt:.1f}s] =====")
+        for r in rows:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

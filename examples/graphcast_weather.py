@@ -1,0 +1,56 @@
+"""GraphCast weather mode — the paper-faithful encoder-processor-decoder on
+a (reduced) lat-lon grid + icosahedral multimesh: one autoregressive
+rollout step and a short next-state training loop.
+
+    PYTHONPATH=src python examples/graphcast_weather.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models.gnn import graphcast as GC
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+cfg = get_smoke("graphcast")
+graph = {k: jnp.asarray(v) for k, v in GC.make_weather_graph(cfg).items()}
+params = GC.init_weather_params(cfg, jax.random.key(0))
+n_grid = cfg.params["grid_lat"] * cfg.params["grid_lon"]
+n_vars = cfg.params["n_vars"]
+
+rng = np.random.default_rng(0)
+state0 = jnp.asarray(rng.normal(size=(n_grid, n_vars)).astype(np.float32))
+# synthetic "dynamics": smooth decay toward a fixed pattern
+target_pattern = jnp.asarray(rng.normal(size=(n_grid, n_vars))
+                             .astype(np.float32))
+next_state = lambda s: 0.9 * s + 0.1 * target_pattern
+
+
+def loss_fn(p, s):
+    pred = GC.weather_forward(p, cfg, s, graph)
+    return jnp.mean((pred - next_state(s)) ** 2)
+
+
+opt = adamw_init(params)
+step = jax.jit(lambda p, o, s: (lambda l, g: adamw_update(
+    p, g, o, AdamWConfig(lr=1e-3, weight_decay=0.0)) + (l,))(
+    *jax.value_and_grad(loss_fn)(p, s)))
+
+s = state0
+losses = []
+for i in range(25):
+    params, opt, _, loss = step(params, opt, s)
+    losses.append(float(loss))
+    s = next_state(s)
+print(f"weather next-state MSE: {losses[0]:.4f} -> {losses[-1]:.4f}")
+assert losses[-1] < losses[0]
+
+# autoregressive rollout
+pred = state0
+for _ in range(3):
+    pred = GC.weather_forward(params, cfg, pred, graph)
+print("3-step rollout finite:", bool(jnp.isfinite(pred).all()),
+      "shape:", pred.shape)

@@ -1,0 +1,79 @@
+"""End-to-end driver: train a small LM through the full stack — data
+pipeline -> train step (AdamW, grad clip, schedule) -> fault-tolerant
+driver with checkpoint/restart -> loss curve.
+
+Default is a CPU-friendly ~5M-param run (~2 min). The ~100M/300-step
+configuration the deliverable describes is:
+
+    PYTHONPATH=src python examples/train_lm_e2e.py \
+        --layers 10 --d-model 768 --steps 300 --batch 8 --seq 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.data import synth_lm_batch
+from repro.models.transformer import model as M
+from repro.models.transformer.steps import make_train_step
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import TrainDriver, TrainDriverConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_lm")
+    args = ap.parse_args()
+
+    cfg = LMConfig(
+        name="example-lm", n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(args.d_model // 64, 1),
+        n_kv_heads=max(args.d_model // 128, 1),
+        d_head=64, d_ff=args.d_model * 3, vocab=8192, tie_embeddings=True)
+    print(f"params: {cfg.n_params/1e6:.1f}M")
+
+    params = M.init_params(cfg, jax.random.key(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, None, AdamWConfig(lr=1e-3),
+                                   total_steps=args.steps),
+                   donate_argnums=(0, 1))
+
+    def step_fn(state, batch):
+        p, o = state
+        tokens, labels = batch
+        p, o, metrics = step(p, o, tokens, labels)
+        return (p, o), metrics
+
+    def batch_fn(i):
+        t, l = synth_lm_batch(cfg.vocab, args.batch, args.seq, seed=0,
+                              step=i)
+        return jnp.asarray(t), jnp.asarray(l)
+
+    driver = TrainDriver(step_fn, (params, opt), batch_fn,
+                         TrainDriverConfig(total_steps=args.steps,
+                                           checkpoint_every=args.steps // 2,
+                                           checkpoint_dir=args.ckpt_dir,
+                                           log_every=max(args.steps // 10,
+                                                         1)))
+    report = driver.run()
+    print("loss curve:")
+    for m in report["metrics"]:
+        print(f"  step {m['step']:4d} loss {m['loss']:.3f} "
+              f"({m['step_time_s']:.2f}s/step)")
+    first, last = report["metrics"][0]["loss"], report["metrics"][-1]["loss"]
+    assert last < first, "loss did not decrease"
+    print(f"OK: {first:.3f} -> {last:.3f}")
+
+
+if __name__ == "__main__":
+    main()

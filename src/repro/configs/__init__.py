@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    GNNConfig,
+    LMConfig,
+    MoEConfig,
+    RecSysConfig,
+    ShapeSpec,
+    shapes_for,
+)
+from repro.configs.registry import ARCH_IDS, get_config, get_shapes, get_smoke
+
+__all__ = [
+    "GNNConfig", "LMConfig", "MoEConfig", "RecSysConfig", "ShapeSpec",
+    "shapes_for", "ARCH_IDS", "get_config", "get_shapes", "get_smoke",
+]

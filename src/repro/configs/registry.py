@@ -1,0 +1,41 @@
+"""``--arch <id>`` registry over the 10 assigned architectures."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ShapeSpec, shapes_for
+
+_MODULES = {
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2p7b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "yi-34b": "repro.configs.yi_34b",
+    "granite-34b": "repro.configs.granite_34b",
+    "qwen1.5-0.5b": "repro.configs.qwen1p5_0p5b",
+    "mace": "repro.configs.mace",
+    "graphcast": "repro.configs.graphcast",
+    "schnet": "repro.configs.schnet",
+    "egnn": "repro.configs.egnn",
+    "din": "repro.configs.din",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str):
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke(arch: str):
+    return importlib.import_module(_MODULES[arch]).SMOKE
+
+
+def get_shapes(arch: str) -> tuple[ShapeSpec, ...]:
+    return shapes_for(get_config(arch))
+
+
+def shape_by_name(arch: str, shape: str) -> ShapeSpec:
+    for s in get_shapes(arch):
+        if s.name == shape:
+            return s
+    raise KeyError(f"{arch} has no shape {shape}")

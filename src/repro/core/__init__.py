@@ -1,0 +1,26 @@
+"""The paper's primary contribution: distributed k-core decomposition as a
+composable JAX module, with exact message accounting, termination-detection
+models, and a simulated-network cost model."""
+
+from repro.core.bz import bz_core_numbers, max_core
+from repro.core.kcore import (
+    KCoreConfig,
+    KCoreResult,
+    kcore_decompose,
+    kcore_decompose_sharded,
+    make_sharded_superstep,
+)
+from repro.core.messages import MessageStats, heartbeat_overhead, work_bound
+
+__all__ = [
+    "bz_core_numbers",
+    "max_core",
+    "KCoreConfig",
+    "KCoreResult",
+    "kcore_decompose",
+    "kcore_decompose_sharded",
+    "make_sharded_superstep",
+    "MessageStats",
+    "heartbeat_overhead",
+    "work_bound",
+]

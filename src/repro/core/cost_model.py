@@ -1,0 +1,45 @@
+"""Simulated-network cost model (the paper's future-work item: "a specific
+framework ... which supports the simulation of accurate latency").
+
+The paper stresses (§IV.F) that Go-channel wall-clock is NOT a valid proxy
+for a real deployment — message complexity is. We therefore model run time
+from the measured per-round message counts under explicit network regimes,
+and separately under the TPU-pod regime used by the dry-run roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.messages import MessageStats
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    name: str
+    latency_s: float            # per-round critical-path latency
+    bandwidth_Bps: float        # aggregate bisection bandwidth
+    bytes_per_message: int = 16  # {sender id, core value} + framing
+
+
+INTERNET = NetworkModel("internet-p2p", latency_s=50e-3, bandwidth_Bps=1e9)
+DATACENTER = NetworkModel("datacenter", latency_s=10e-6, bandwidth_Bps=100e9)
+TPU_POD = NetworkModel("tpu-pod-ici", latency_s=1e-6,
+                       bandwidth_Bps=256 * 50e9)   # 256 chips × ~50 GB/s link
+
+
+def simulate_runtime(stats: MessageStats, model: NetworkModel) -> dict:
+    per_round_bytes = stats.messages_per_round.astype(np.float64) * \
+        model.bytes_per_message
+    per_round_s = model.latency_s + per_round_bytes / model.bandwidth_Bps
+    return {
+        "model": model.name,
+        "rounds": stats.rounds,
+        "total_s": float(per_round_s.sum()),
+        "latency_bound_fraction":
+            float(stats.rounds * model.latency_s / max(per_round_s.sum(),
+                                                       1e-30)),
+        "per_round_s": per_round_s,
+    }

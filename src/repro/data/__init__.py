@@ -1,0 +1,3 @@
+from repro.data.pipeline import lm_batch_stream, synth_lm_batch
+
+__all__ = ["lm_batch_stream", "synth_lm_batch"]

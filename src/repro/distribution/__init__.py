@@ -1,0 +1,10 @@
+from repro.distribution.sharding import (
+    ShardingRules,
+    constrain,
+    lm_param_specs,
+    lm_rules,
+    replicated_rules,
+)
+
+__all__ = ["ShardingRules", "constrain", "lm_param_specs", "lm_rules",
+           "replicated_rules"]

@@ -1,0 +1,154 @@
+"""Sharding rules: how each model family maps onto the production mesh.
+
+Mesh contract (launch/mesh.py): axes ("data", "model") single pod,
+("pod", "data", "model") multi-pod. "pod" composes with "data" as the outer
+data-parallel axis (hierarchical gradient all-reduce); FSDP parameter
+sharding uses the "data" axis; tensor/expert parallelism uses "model".
+
+The model code is mesh-agnostic: it calls ``constrain(x, rules.<key>)``,
+which no-ops when rules is None (single-device smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Activation NamedShardings for the LM stack (None entries = no-op)."""
+    data_axes: tuple          # logical data-parallel axes, e.g. ("pod","data")
+    model_axis: str | None    # tensor-parallel axis
+    # activations (NamedSharding each)
+    tokens: object            # (B, S)
+    residual: object          # (B, S, d) — sequence-parallel between blocks
+    residual_decode: object   # (B, 1, d)
+    attn_q: object            # (B, S, HQ, Dh) — flat-head layout
+    kv_cache: object          # (B, Hkv, T, Dh)
+    moe_x: object             # (B, S, d) pre-dispatch
+    moe_dispatch: object      # (B, S, E, C)
+    moe_buf: object           # (B, E, C, d)
+    moe_hidden: object        # (B, E, C, f)
+    logits_chunk: object      # (B, chunk, V)
+    ffn_hidden: object        # (B, S, f)
+
+
+def lm_rules(mesh: jax.sharding.Mesh, cfg) -> ShardingRules:
+    axes = mesh.axis_names
+    model = "model" if "model" in axes else None
+    data = tuple(a for a in axes if a != "model")
+    dp = data if len(data) > 1 else (data[0] if data else None)
+    # Train/prefill attention runs in the flat-head layout (B, S, HQ, Dh)
+    # with KV expanded to HQ (model.py), so the head dim shards over
+    # "model" for every assigned arch (HQ in {16, 48, 56} vs 16: GSPMD pads
+    # 56 -> 64, a 1.14x waste; kv-head counts like 8 or 1 would force
+    # involuntary replication instead).
+    model_size = mesh.shape[model] if model else 1
+    attn_q = P(dp, None, model, None)
+    # Decode cache keeps the grouped (B, Hkv, T, Dh) layout: shard kv heads
+    # when they divide the model axis (pjit input shardings require exact
+    # divisibility), else shard the TIME dim (GQA-8/MQA: the distributed
+    # softmax gather is cheap at decode).
+    shard_kv_heads = model_size > 0 and cfg.n_kv_heads % model_size == 0
+    kv_cache = P(dp, model, None, None) if shard_kv_heads else \
+        P(dp, None, model, None)
+
+    def named(spec):
+        # NamedSharding (not bare PartitionSpec): with_sharding_constraint
+        # must not depend on an ambient `with mesh:` context.
+        return NamedSharding(mesh, spec)
+
+    return ShardingRules(
+        data_axes=data, model_axis=model,
+        tokens=named(P(dp, None)),
+        residual=named(P(dp, model, None)),   # sequence parallelism
+        residual_decode=named(P(dp, None, None)),
+        attn_q=named(attn_q),
+        kv_cache=named(kv_cache),
+        moe_x=named(P(dp, None, None)),                 # pre-dispatch tokens
+        moe_dispatch=named(P(dp, None, model, None)),   # (B, S, E, C)
+        moe_buf=named(P(dp, model, None, None)),        # (B, E, C, d) — EP
+        moe_hidden=named(P(dp, model, None, None)),     # (B, E, C, f)
+        logits_chunk=named(P(dp, None, model)),
+        ffn_hidden=named(P(dp, None, model)),
+    )
+
+
+def replicated_rules() -> None:
+    """Smoke-test rules: no constraints."""
+    return None
+
+
+def constrain(x, sharding):
+    """with_sharding_constraint; None = no-op (single-device smoke path).
+
+    Deliberately NO exception swallowing: a failing constraint is a bug in
+    the sharding rules and must surface in the dry-run."""
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+# ---------------------------------------------------------------------- #
+# Parameter specs (FSDP over "data", TP over "model")
+# ---------------------------------------------------------------------- #
+
+def lm_param_specs(cfg) -> dict:
+    """PartitionSpec tree matching models/transformer param structure.
+
+    Layout: stacked layers lead with L (never sharded); TP shards the
+    head/ff output dim over "model"; FSDP shards the d_model input dim over
+    "data". Embedding: vocab over "model", d over "data".
+    """
+    attn = {
+        "wq": P(None, "data", "model"),
+        "wk": P(None, "data", "model"),
+        "wv": P(None, "data", "model"),
+        "wo": P(None, "model", "data"),
+    }
+    if cfg.qkv_bias:
+        attn.update({"bq": P(None, "model"), "bk": P(None, "model"),
+                     "bv": P(None, "model")})
+    layers: dict = {
+        "attn": attn,
+        "norm1": P(None, None),
+        "norm2": P(None, None),
+    }
+    if cfg.moe:
+        # Expert parallelism: E over "model"; FSDP: d over "data".
+        moe = {
+            "router": P(None, "data", None),
+            "w_up": P(None, "model", "data", None),
+            "w_down": P(None, "model", None, "data"),
+        }
+        if cfg.mlp_type == "swiglu":
+            moe["w_gate"] = P(None, "model", "data", None)
+        if cfg.moe.n_shared:
+            moe["shared"] = _mlp_specs(cfg, stacked=True)
+        layers["moe"] = moe
+    else:
+        layers["mlp"] = _mlp_specs(cfg, stacked=True)
+    specs = {
+        "embed": P("model", "data"),
+        "layers": layers,
+        "norm_f": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P("model", "data")
+    return specs
+
+
+def _mlp_specs(cfg, stacked: bool) -> dict:
+    lead = (None,) if stacked else ()
+    d = {
+        "w_up": P(*lead, "data", "model"),
+        "w_down": P(*lead, "model", "data"),
+    }
+    if cfg.mlp_type == "swiglu":
+        d["w_gate"] = P(*lead, "data", "model")
+    return d

@@ -1,0 +1,16 @@
+"""Graph substrate: dense-layout graph structs, generators, partitioning,
+neighbor sampling, and IO following the paper's dataCleanse rules."""
+
+from repro.graph.structs import Graph, EllGraph, build_ell, pad_graph_for_shards
+from repro.graph import generators, io, partition, sampler
+
+__all__ = [
+    "Graph",
+    "EllGraph",
+    "build_ell",
+    "pad_graph_for_shards",
+    "generators",
+    "io",
+    "partition",
+    "sampler",
+]

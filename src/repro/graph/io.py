@@ -1,0 +1,53 @@
+"""Graph IO — the paper's ``dataCleanse`` procedure.
+
+Supports the two on-disk formats the paper mentions:
+  * SNAP-style edge lists (``u<TAB>v`` per line, ``#`` comments), directed or
+    undirected — converted to undirected per the paper's rules;
+  * the JSON adjacency format the paper converts graphs into
+    (``{"0": [1, 2], "1": [0], ...}``).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.graph.structs import Graph
+
+
+def parse_edge_list(text: str, n: int | None = None) -> Graph:
+    rows = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith(("#", "%")):
+            continue
+        parts = line.replace(",", " ").split()
+        rows.append((int(parts[0]), int(parts[1])))
+    return Graph.from_edges(np.asarray(rows, np.int64).reshape(-1, 2), n=n)
+
+
+def load_edge_list(path: str, n: int | None = None) -> Graph:
+    with open(path) as f:
+        return parse_edge_list(f.read(), n=n)
+
+
+def parse_json_adjacency(text: str) -> Graph:
+    adj = json.loads(text)
+    edges = []
+    for u, nbrs in adj.items():
+        ui = int(u)
+        for v in nbrs:
+            edges.append((ui, int(v)))
+    n = (max(int(u) for u in adj) + 1) if adj else 0
+    return Graph.from_edges(np.asarray(edges, np.int64).reshape(-1, 2), n=n)
+
+
+def to_json_adjacency(g: Graph) -> str:
+    adj = {str(u): [int(v) for v in g.neighbors(u)] for u in range(g.n)}
+    return json.dumps(adj)
+
+
+def save_json_adjacency(g: Graph, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(to_json_adjacency(g))

@@ -1,0 +1,7 @@
+"""Oracle: the XLA take + masked-sum path from models/recsys."""
+
+from repro.models.recsys.embedding_bag import embedding_bag
+
+
+def embedding_bag_ref(table, indices):
+    return embedding_bag(table, indices, mode="sum")

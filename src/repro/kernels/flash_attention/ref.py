@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (materialized softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q: (BH, Sq, d), k/v: (BHk, Sk, d) with BH % BHk == 0 (GQA)."""
+    BHq, Sq, d = q.shape
+    BHk, Sk, _ = k.shape
+    rep = BHq // BHk
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=0)
+        v = jnp.repeat(v, rep, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.kcore_hindex.ops import hindex_rows
+
+__all__ = ["hindex_rows"]

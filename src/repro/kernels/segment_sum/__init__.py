@@ -1,0 +1,6 @@
+from repro.kernels.segment_sum.ops import (
+    blocked_layout,
+    segment_sum_blocked,
+)
+
+__all__ = ["blocked_layout", "segment_sum_blocked"]

@@ -1,0 +1,67 @@
+"""Pallas TPU segment-sum over row-block-grouped sorted COO.
+
+The scatter in ``jax.ops.segment_sum`` is the message-aggregation hot spot of
+both the k-core engine and every assigned GNN. TPUs have no efficient
+scatter; the TPU-native formulation is a ONE-HOT MATMUL per edge block
+(rows_local one-hot (be, R) x values (be, F) on the MXU) accumulated into a
+VMEM-resident output row block.
+
+Layout contract (built by ops.blocked_layout): edges are sorted by segment
+and PADDED so each edge block of ``be`` edges touches exactly one output row
+block of ``R`` rows; ``block_row[i]`` (scalar-prefetched — the out BlockSpec
+index map reads it) names that row block. Sorted edges mean each out block
+is visited by consecutive grid steps, so the accumulate-in-VMEM pattern is
+safe on TPU's sequential grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _seg_kernel(block_row_ref, vals_ref, rows_ref, out_ref, *, R: int):
+    i = pl.program_id(0)
+    first = jnp.logical_or(
+        i == 0, block_row_ref[jnp.maximum(i - 1, 0)] != block_row_ref[i])
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...]                      # (be, F)
+    rows = rows_ref[...]                      # (be, 1) local row in [0, R)
+    onehot = (rows == jax.lax.broadcasted_iota(jnp.int32, (rows.shape[0], R),
+                                               1)).astype(vals.dtype)
+    # (R, be) x (be, F) on the MXU
+    out_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype)
+
+
+def segment_sum_pallas(vals, rows_local, block_row, n_blocks_out: int,
+                       *, R: int, interpret: bool):
+    """vals: (E_pad, F); rows_local: (E_pad, 1) int32 row-within-block;
+    block_row: (n_edge_blocks,) int32 out-block id per edge block.
+    Returns (n_blocks_out * R, F)."""
+    E, F = vals.shape
+    be = E // block_row.shape[0]
+    grid = (block_row.shape[0],)
+    return pl.pallas_call(
+        functools.partial(_seg_kernel, R=R),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((be, F), lambda i, br: (i, 0)),
+                pl.BlockSpec((be, 1), lambda i, br: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((R, F), lambda i, br: (br[i], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_blocks_out * R, F), vals.dtype),
+        interpret=interpret,
+    )(block_row, vals, rows_local)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle: jax.ops.segment_sum."""
+
+from __future__ import annotations
+
+import jax
+
+
+def segment_sum_ref(vals, seg_ids, n: int):
+    return jax.ops.segment_sum(vals, seg_ids, num_segments=n)

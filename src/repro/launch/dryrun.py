@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before ANY other import: jax locks the
+# device count on first initialization. Everything else (smoke tests,
+# benches) must see the real single device, so this flag lives ONLY here.
+
+# Lowering keeps lax.scan loops (compile stays minutes-not-hours across the
+# 80-cell grid and memory_analysis reflects the program you would actually
+# run). Cost accounting is therefore done loop-aware:
+#   * FLOPs / HBM bytes: trip-count-exact jaxpr walk (launch/jaxpr_cost) —
+#     XLA's HloCostAnalysis counts while bodies ONCE, so it under-counts by
+#     the trip count (validated: on a fully-unrolled small config the two
+#     agree; see EXPERIMENTS.md §Roofline methodology).
+#   * collective bytes: post-SPMD HLO parse with while-trip multipliers
+#     (launch/hlo_analysis.collective_bytes).
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell:
+    jit(step, in_shardings, out_shardings).lower(*specs).compile()
+then record memory_analysis() (fits?), cost_analysis() (FLOPs/bytes) and the
+collective schedule (parsed from post-SPMD HLO) into a JSON blob consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod1
+    PYTHONPATH=src python -m repro.launch.dryrun --arch kcore --graph LJ1
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_shapes
+from repro.configs.registry import shape_by_name
+from repro.launch import hlo_analysis, jaxpr_cost
+from repro.launch.mesh import make_production_mesh, n_devices
+from repro.optim import adamw_init
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# long_500k needs sub-quadratic attention: only mixtral (SWA) runs it.
+SKIP = {
+    ("qwen2-moe-a2.7b", "long_500k"): "full attention (no sub-quadratic path)",
+    ("yi-34b", "long_500k"): "full attention (no sub-quadratic path)",
+    ("granite-34b", "long_500k"): "full attention (no sub-quadratic path)",
+    ("qwen1.5-0.5b", "long_500k"): "full attention (no sub-quadratic path)",
+}
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (step, ordered ShapeDtypeStruct args, in_sh, out_sh)."""
+    cfg = get_config(arch)
+    shape = shape_by_name(arch, shape_name)
+    if cfg.family == "lm":
+        from repro.models.transformer import steps as S
+        step, specs, in_sh, out_sh = S.build_step(cfg, shape, mesh)
+        if shape.kind == "train":
+            args = (S.param_shapes(cfg), S.opt_shapes(cfg),
+                    specs["tokens"], specs["labels"])
+        elif shape.kind == "prefill":
+            args = (S.param_shapes(cfg), specs["tokens"])
+        else:
+            args = (S.param_shapes(cfg), specs["token"], specs["cache"],
+                    specs["pos"])
+        return step, args, in_sh, out_sh
+    if cfg.family == "gnn":
+        from repro.models.gnn import steps as S
+        step, specs, in_sh, out_sh = S.build_step(cfg, shape, mesh)
+        opt = jax.eval_shape(adamw_init, specs["_params"])
+        args = (specs["_params"], opt, specs["batch"])
+        return step, args, in_sh, out_sh
+    # recsys
+    from repro.models.recsys import steps as S
+    from repro.models.recsys import din
+    step, specs, in_sh, out_sh = S.build_step(cfg, shape, mesh)
+    pshapes = jax.eval_shape(lambda k: din.init_params(cfg, k),
+                             jax.random.key(0))
+    if shape.kind == "train":
+        opt = jax.eval_shape(adamw_init, pshapes)
+        args = (pshapes, opt, specs)
+    else:
+        args = (pshapes, specs)
+    return step, args, in_sh, out_sh
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             save: bool = True) -> dict:
+    if (arch, shape_name) in SKIP:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "SKIP", "reason": SKIP[(arch, shape_name)]}
+        if save:
+            _save(rec)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    chips = n_devices(mesh)
+    t0 = time.time()
+    try:
+        step, args, in_sh, out_sh = build_cell(arch, shape_name, mesh)
+        # trip-count-exact logical cost (global, includes remat recompute)
+        jflops, jbytes = jaxpr_cost.step_cost(step, *args)
+        # donate aliasable state (params/opt for train, cache for decode) —
+        # exactly what the real launcher does, so memory analysis matches.
+        shape_obj = shape_by_name(arch, shape_name)
+        if shape_obj.kind == "train":
+            donate = (0, 1)
+        elif shape_obj.kind == "decode" and get_config(arch).family == "lm":
+            donate = (2,)
+        else:
+            donate = ()
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        coll = hlo_analysis.collective_bytes(compiled.as_text())
+        roof = hlo_analysis.Roofline(
+            flops=jflops, hbm_bytes=jbytes,
+            coll_bytes=coll["total_bytes"] * chips, chips=chips)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "OK", "chips": chips,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": _mem_dict(mem),
+            "roofline": roof.to_dict(),
+            "collectives": coll,
+            "xla_cost_analysis_per_device": {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            },
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash --all
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    if save:
+        _save(rec)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        live = out.get("argument_size_in_bytes", 0) + \
+            out.get("output_size_in_bytes", 0) + \
+            out.get("temp_size_in_bytes", 0) - \
+            out.get("alias_size_in_bytes", 0)
+        out["per_device_live_bytes"] = live
+        out["fits_16GB"] = bool(live < 16e9)
+    return out
+
+
+def _save(rec: dict) -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json".replace("/", "-")
+    (OUT_DIR / name).write_text(json.dumps(rec, indent=1))
+
+
+# ---------------------------------------------------------------------- #
+# k-core engine cells (the paper's own workload)
+# ---------------------------------------------------------------------- #
+
+def run_kcore_cell(graph_abbrev: str, mesh_name: str, save=True) -> dict:
+    import numpy as np
+    from repro.core.kcore import _bs_iters, make_sharded_superstep
+    from repro.graph.generators import SNAP_BY_ABBREV
+    from repro.graph.partition import ShardedGraph
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    chips = n_devices(mesh)
+    entry = SNAP_BY_ABBREV[graph_abbrev]
+    # dry-run lowers with the ORIGINAL graph sizes (ShapeDtypeStructs only)
+    n, arcs = entry.n, 2 * entry.m
+    V = -(-n // chips)
+    A = -(-arcs // chips)
+    sg = ShardedGraph(
+        n_shards=chips, n_real=n, verts_per_shard=V, arcs_per_shard=A,
+        src=None, dst=None, arc_mask=None, deg=None, vert_mask=None)
+    n_iters = _bs_iters(entry.max_deg)
+    superstep, _ = make_sharded_superstep(sg, mesh, mesh.axis_names, n_iters)
+    i32 = jax.numpy.int32
+    st = lambda dt: jax.ShapeDtypeStruct((chips, V), dt)
+    at = lambda dt: jax.ShapeDtypeStruct((chips, A), dt)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    rep = NamedSharding(mesh, P())
+    t0 = time.time()
+    try:
+        args = (st(i32), at(i32), at(i32), at(jax.numpy.bool_), st(i32))
+        jflops, jbytes = jaxpr_cost.step_cost(superstep, *args)
+        jitted = jax.jit(superstep, in_shardings=(sh,) * 5,
+                         out_shardings=(sh, rep, rep))
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        coll = hlo_analysis.collective_bytes(compiled.as_text())
+        roof = hlo_analysis.Roofline(
+            flops=jflops, hbm_bytes=jbytes,
+            coll_bytes=coll["total_bytes"] * chips, chips=chips)
+        rec = {
+            "arch": "kcore", "shape": graph_abbrev, "mesh": mesh_name,
+            "status": "OK", "chips": chips,
+            "n": n, "arcs": arcs, "bs_iters": n_iters,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": _mem_dict(compiled.memory_analysis()),
+            "roofline": roof.to_dict(),
+            "collectives": coll,
+        }
+    except Exception as e:  # noqa: BLE001
+        rec = {"arch": "kcore", "shape": graph_abbrev, "mesh": mesh_name,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    if save:
+        _save(rec)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--graph", default=None, help="kcore: SNAP abbrev")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in get_shapes(arch):
+                cells.append((arch, s.name))
+    elif args.arch == "kcore":
+        rec = run_kcore_cell(args.graph or "FC", args.mesh)
+        print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                         indent=1))
+        return
+    else:
+        shapes = [args.shape] if args.shape else \
+            [s.name for s in get_shapes(args.arch)]
+        cells = [(args.arch, s) for s in shapes]
+
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.mesh)
+        status = rec["status"]
+        extra = rec.get("reason") or rec.get("error") or ""
+        roof = rec.get("roofline", {})
+        dom = roof.get("dominant", "")
+        mem = rec.get("memory", {}).get("per_device_live_bytes")
+        memgb = f"{mem/1e9:.2f}GB" if mem else "?"
+        print(f"[{status}] {arch} x {shape} x {args.mesh} "
+              f"mem/dev={memgb} dominant={dom} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

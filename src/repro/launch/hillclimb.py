@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver (EXPERIMENTS.md §Perf): lowers VARIANTS of the
+three hillclimb cells and prints their roofline terms without touching the
+baseline records.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb mixtral_cap
+    PYTHONPATH=src python -m repro.launch.hillclimb --list
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.configs.registry import shape_by_name
+from repro.launch import hlo_analysis, jaxpr_cost
+from repro.launch.dryrun import _mem_dict, build_cell
+from repro.launch.mesh import make_production_mesh, n_devices
+
+
+def measure(arch_cfg, arch: str, shape_name: str) -> dict:
+    """Lower a (possibly modified) config for one cell; return terms."""
+    import repro.configs.registry as registry
+    # temporarily override the registry entry so build_cell sees the variant
+    orig = registry.get_config
+    registry.get_config = lambda a: arch_cfg if a == arch else orig(a)
+    try:
+        import repro.launch.dryrun as dr
+        dr.get_config = registry.get_config
+        mesh = make_production_mesh()
+        chips = n_devices(mesh)
+        step, args, in_sh, out_sh = build_cell(arch, shape_name, mesh)
+        jflops, jbytes = jaxpr_cost.step_cost(step, *args)
+        t0 = time.time()
+        compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=(0, 1) if shape_name.startswith(
+                               "train") else ()).lower(*args).compile()
+        coll = hlo_analysis.collective_bytes(compiled.as_text())
+        roof = hlo_analysis.Roofline(
+            flops=jflops, hbm_bytes=jbytes,
+            coll_bytes=coll["total_bytes"] * chips, chips=chips)
+        mem = _mem_dict(compiled.memory_analysis())
+        return {
+            "compute_s": round(roof.compute_s, 4),
+            "memory_s": round(roof.memory_s, 4),
+            "collective_s": round(roof.collective_s, 4),
+            "dominant": roof.dominant,
+            "mem_GB": round(mem.get("per_device_live_bytes", 0) / 1e9, 2),
+            "compile_s": round(time.time() - t0, 1),
+        }
+    finally:
+        registry.get_config = orig
+
+
+VARIANTS = {}
+
+
+def variant(name):
+    def deco(fn):
+        VARIANTS[name] = fn
+        return fn
+    return deco
+
+
+@variant("mixtral_base")
+def mixtral_base():
+    return measure(get_config("mixtral-8x22b"), "mixtral-8x22b", "train_4k")
+
+
+@variant("mixtral_cap110")
+def mixtral_cap110():
+    cfg = get_config("mixtral-8x22b")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=1.10))
+    return measure(cfg, "mixtral-8x22b", "train_4k")
+
+
+@variant("mixtral_dots_remat")
+def mixtral_dots_remat():
+    cfg = dataclasses.replace(get_config("mixtral-8x22b"),
+                              remat_policy="dots")
+    return measure(cfg, "mixtral-8x22b", "train_4k")
+
+
+@variant("mixtral_cap110_dots")
+def mixtral_cap110_dots():
+    cfg = get_config("mixtral-8x22b")
+    cfg = dataclasses.replace(
+        cfg, remat_policy="dots",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=1.10))
+    return measure(cfg, "mixtral-8x22b", "train_4k")
+
+
+@variant("mixtral_micro4_dots")
+def mixtral_micro4_dots():
+    cfg = get_config("mixtral-8x22b")
+    cfg = dataclasses.replace(
+        cfg, remat_policy="dots", train_microbatches=16,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=1.10))
+    return measure(cfg, "mixtral-8x22b", "train_4k")
+
+
+@variant("mixtral_alldots")
+def mixtral_alldots():
+    cfg = get_config("mixtral-8x22b")
+    cfg = dataclasses.replace(
+        cfg, remat_policy="all_dots", train_microbatches=16,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=1.10))
+    return measure(cfg, "mixtral-8x22b", "train_4k")
+
+
+@variant("mixtral_alldots_m64")
+def mixtral_alldots_m64():
+    cfg = get_config("mixtral-8x22b")
+    cfg = dataclasses.replace(
+        cfg, remat_policy="all_dots", train_microbatches=64,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=1.10))
+    return measure(cfg, "mixtral-8x22b", "train_4k")
+
+
+@variant("graphcast_products")
+def graphcast_products():
+    return measure(get_config("graphcast"), "graphcast", "ogb_products")
+
+
+@variant("din_train")
+def din_train():
+    return measure(get_config("din"), "din", "train_batch")
+
+
+@variant("qwen2moe_base")
+def qwen2moe_base():
+    return measure(get_config("qwen2-moe-a2.7b"), "qwen2-moe-a2.7b",
+                   "train_4k")
+
+
+@variant("qwen2moe_cap105")
+def qwen2moe_cap105():
+    cfg = get_config("qwen2-moe-a2.7b")
+    cfg = dataclasses.replace(
+        cfg, remat_policy="dots",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=1.05))
+    return measure(cfg, "qwen2-moe-a2.7b", "train_4k")
+
+
+@variant("din_fullshard")
+def din_fullshard():
+    os.environ["REPRO_DIN_FULLSHARD"] = "1"
+    try:
+        cfg = dataclasses.replace(get_config("din"), n_items=1_000_448)
+        return measure(cfg, "din", "train_batch")
+    finally:
+        del os.environ["REPRO_DIN_FULLSHARD"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        print("\n".join(VARIANTS))
+        return
+    for name in (args.names or list(VARIANTS)):
+        res = VARIANTS[name]()
+        print(f"{name}: {json.dumps(res)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

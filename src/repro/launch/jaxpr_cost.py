@@ -1,0 +1,108 @@
+"""Trip-count-aware jaxpr FLOPs counter — cross-check for cost_analysis().
+
+Walks the closed jaxpr of a step function, counting dot_general FLOPs
+(2*M*N*K with batch dims) and multiplying scan/while bodies by their trip
+counts. This is the MODEL-side count used for the MODEL_FLOPS / HLO_FLOPs
+"useful compute" ratio in EXPERIMENTS.md §Roofline (it sees remat recompute
+exactly as XLA executes it, because remat regions appear as separate eqns).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dn = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dn
+    m = np.prod([a.shape[i] for i in range(len(a.shape))
+                 if i not in lc and i not in lb], dtype=float)
+    n = np.prod([b.shape[i] for i in range(len(b.shape))
+                 if i not in rc and i not in rb], dtype=float)
+    k = np.prod([a.shape[i] for i in lc], dtype=float)
+    batch = np.prod([a.shape[i] for i in lb], dtype=float)
+    return 2.0 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops = 2 * out_elems * (kernel spatial * in_channels)
+    k_elems = np.prod(rhs.shape, dtype=float) / max(rhs.shape[-1], 1)
+    return 2.0 * np.prod(out.shape, dtype=float) * k_elems
+
+
+# Memory-traffic ops: operands stream HBM<->VMEM once each (fusion folds
+# elementwise chains into these, so elementwise ops are NOT counted).
+_MEM_OPS = {"dot_general", "conv_general_dilated", "gather", "scatter",
+            "scatter-add", "scatter_add", "dynamic_update_slice",
+            "dynamic_slice", "take", "sort", "top_k", "reduce_sum",
+            "segment_sum", "cumsum", "argsort"}
+
+
+def _aval_bytes(v) -> float:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0.0
+    return float(np.prod(aval.shape, dtype=float) *
+                 np.dtype(aval.dtype).itemsize)
+
+
+def jaxpr_cost(jaxpr) -> tuple[float, float]:
+    """(flops, hbm_bytes) with exact scan trip-count multipliers."""
+    flops = 0.0
+    nbytes = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            flops += _dot_flops(eqn)
+        elif name == "conv_general_dilated":
+            flops += _conv_flops(eqn)
+        if name in _MEM_OPS:
+            nbytes += sum(_aval_bytes(v) for v in eqn.invars) + \
+                sum(_aval_bytes(v) for v in eqn.outvars)
+        if name == "scan":
+            f, b = jaxpr_cost(eqn.params["jaxpr"].jaxpr)
+            L = eqn.params["length"]
+            flops += L * f
+            nbytes += L * b
+        elif name == "while":
+            # body counted once; our hot loops are lax.scan (exact above).
+            f, b = jaxpr_cost(eqn.params["body_jaxpr"].jaxpr)
+            flops += f
+            nbytes += b
+        elif name == "cond":
+            costs = [jaxpr_cost(br.jaxpr) for br in eqn.params["branches"]]
+            if costs:
+                flops += max(c[0] for c in costs)
+                nbytes += max(c[1] for c in costs)
+        elif name == "shard_map":
+            # body avals are per-device: scale back to global
+            mesh = eqn.params.get("mesh")
+            ndev = float(np.prod(list(mesh.shape.values()))) if mesh is not \
+                None else 1.0
+            sub = eqn.params["jaxpr"]
+            f, b = jaxpr_cost(getattr(sub, "jaxpr", sub))
+            flops += ndev * f
+            nbytes += ndev * b
+        elif eqn.params:
+            for key in ("jaxpr", "call_jaxpr"):
+                sub = eqn.params.get(key)
+                if sub is not None:
+                    f, b = jaxpr_cost(getattr(sub, "jaxpr", sub))
+                    flops += f
+                    nbytes += b
+    return flops, nbytes
+
+
+def step_flops(fn, *args) -> float:
+    """Total dot/conv FLOPs of one (unsharded) step."""
+    return step_cost(fn, *args)[0]
+
+
+def step_cost(fn, *args) -> tuple[float, float]:
+    """(FLOPs, HBM-bytes proxy) of one (unsharded, logical) step."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return jaxpr_cost(closed.jaxpr)

@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+NOTE: functions, not module-level constants — importing this module never
+touches jax device state. The dry-run entry point (dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benches) sees the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh for CI-scale integration tests."""
+    return _mk((n_data, n_model), ("data", "model"))
+
+
+def flat_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def n_devices(mesh: jax.sharding.Mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= mesh.shape[a]
+    return n

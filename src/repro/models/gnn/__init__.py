@@ -1,0 +1,3 @@
+from repro.models.gnn import common, egnn, graphcast, mace, schnet, steps
+
+__all__ = ["common", "egnn", "graphcast", "mace", "schnet", "steps"]

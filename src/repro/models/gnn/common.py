@@ -1,0 +1,257 @@
+"""Shared GNN substrate.
+
+JAX has no native sparse message passing — per the assignment and
+kernel_taxonomy §GNN, scatter/gather message passing is built on
+``jax.ops.segment_sum`` over an edge-index list. This module provides that
+substrate plus the uniform GraphBatch layout every assigned GNN consumes.
+
+All four assigned shapes lower to the same layout:
+  * full_graph_sm / ogb_products — the whole graph as one batch;
+  * minibatch_lg — the sampled subgraph (union of sampler layers) with
+    predictions on the seed prefix;
+  * molecule — a disjoint union of B small graphs with ``graph_id`` pooling.
+
+Geometric models (MACE/SchNet/EGNN) require positions + species; for the
+citation-shaped cells these are synthesized inputs (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structs import Graph
+
+
+# GraphBatch: a plain dict of arrays (pytree-friendly):
+#   feats (N, d_feat) | species (N,) | positions (N, 3)
+#   src, dst (E,) int32 | edge_mask (E,) bool | node_mask (N,) bool
+#   graph_id (N,) int32 | labels (N,) int32 or (G,) f32
+
+
+def scatter_sum(values, index, n):
+    """Segment-sum messages ``values`` (E, ...) into ``n`` destinations.
+
+    Single device: jax.ops.segment_sum. Under a mesh (flat-sharding context
+    set): a shard_map with per-device local segment-sum + psum_scatter —
+    GSPMD cannot partition scatter and falls back to full replication
+    (measured 49GB/device on graphcast x ogb_products), while the explicit
+    reduce-scatter is the k-core engine's own aggregation pattern."""
+    mesh, axes = _FLAT_AXES_SHARDING["mesh"], _FLAT_AXES_SHARDING["axes"]
+    if mesh is None or values.shape[0] < 4096 or n % _mesh_size(mesh):
+        return jax.ops.segment_sum(values, index, num_segments=n)
+    from jax.sharding import PartitionSpec as P
+
+    def local(v, i):
+        full = jax.ops.segment_sum(v, i, num_segments=n)
+        return jax.lax.psum_scatter(full, axes, scatter_dimension=0,
+                                    tiled=True)
+
+    rest = (None,) * (values.ndim - 1)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, *rest), P(axes)),
+        out_specs=P(axes, *rest), check_vma=False)(values, index)
+
+
+def gather_rows(h, idx):
+    """h[idx] with h row-sharded: explicit all-gather + local take (the
+    estimate-broadcast pattern from core/kcore.py) instead of GSPMD's
+    replicated gather."""
+    return gather_rows_multi(h, (idx,))[0]
+
+
+def gather_rows_multi(h, idxs: tuple):
+    """Gather h rows for SEVERAL index vectors from ONE all-gather —
+    a GraphNet block needs h[src] and h[dst]; sharing the broadcast halves
+    the dominant collective (§Perf graphcast iteration 2)."""
+    mesh, axes = _FLAT_AXES_SHARDING["mesh"], _FLAT_AXES_SHARDING["axes"]
+    if mesh is None or h.shape[0] % _mesh_size(mesh) or \
+            any(i.shape[0] % _mesh_size(mesh) for i in idxs):
+        return tuple(jnp.take(h, i, axis=0) for i in idxs)
+    from jax.sharding import PartitionSpec as P
+
+    def local(h_l, *i_l):
+        hg = jax.lax.all_gather(h_l, axes, axis=0, tiled=True)
+        return tuple(jnp.take(hg, i, axis=0) for i in i_l)
+
+    rest = (None,) * (h.ndim - 1)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, *rest),) + (P(axes),) * len(idxs),
+        out_specs=(P(axes, *rest),) * len(idxs), check_vma=False)(h, *idxs)
+
+
+def _mesh_size(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= mesh.shape[a]
+    return n
+
+
+def scatter_mean(values, index, n, eps=1e-9):
+    s = scatter_sum(values, index, n)
+    cnt = scatter_sum(jnp.ones(values.shape[:1], values.dtype), index, n)
+    return s / (cnt[:, None] + eps) if values.ndim > 1 else s / (cnt + eps)
+
+
+COMPUTE_DTYPE = jnp.bfloat16   # GNN activation dtype (params stay fp32)
+
+# Flat row-sharding context for full-batch graph work: node/edge arrays are
+# sharded over every mesh axis (set by gnn.steps when a mesh is present;
+# None on the single-device smoke path). GSPMD needs these constraints
+# INSIDE the layer loop or it replicates the (n_nodes, d) carries — measured
+# 167GB/device on graphcast x ogb_products without them.
+_FLAT_AXES_SHARDING: dict = {"mesh": None, "axes": None}
+
+
+def set_flat_sharding(mesh, axes) -> None:
+    _FLAT_AXES_SHARDING["mesh"] = mesh
+    _FLAT_AXES_SHARDING["axes"] = tuple(axes) if axes else None
+
+
+def constrain_rows(x):
+    """Shard dim 0 over all mesh axes (no-op without a mesh context)."""
+    mesh = _FLAT_AXES_SHARDING["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = P(_FLAT_AXES_SHARDING["axes"], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [{
+        "w": jax.random.normal(k, (a, b), dtype) * (1.0 / np.sqrt(a)),
+        "b": jnp.zeros((b,), dtype),
+    } for k, a, b in zip(ks, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"].astype(x.dtype) + l["b"].astype(x.dtype)
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layernorm(x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Radial bases
+# ---------------------------------------------------------------------- #
+
+def gaussian_rbf(dist, n_rbf: int, cutoff: float):
+    """SchNet-style Gaussian radial basis."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    return jnp.exp(-gamma * (dist[..., None] - centers) ** 2)
+
+
+def bessel_rbf(dist, n_rbf: int, cutoff: float):
+    """MACE/NequIP Bessel basis with smooth cutoff envelope."""
+    d = jnp.maximum(dist, 1e-6)[..., None]
+    n = jnp.arange(1, n_rbf + 1)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * d / cutoff) / d
+    x = jnp.clip(dist / cutoff, 0, 1)[..., None]
+    envelope = 1 - 10 * x**3 + 15 * x**4 - 6 * x**5   # polynomial cutoff p=3
+    return basis * envelope
+
+
+# ---------------------------------------------------------------------- #
+# Batch builders (host-side, numpy)
+# ---------------------------------------------------------------------- #
+
+def batch_from_graph(g: Graph, d_feat: int, n_classes: int, seed: int = 0,
+                     with_positions: bool = True) -> dict:
+    rng = np.random.default_rng(seed)
+    batch = {
+        "src": g.src.astype(np.int32),
+        "dst": g.dst.astype(np.int32),
+        "edge_mask": np.ones(g.num_arcs, bool),
+        "node_mask": np.ones(g.n, bool),
+        "graph_id": np.zeros(g.n, np.int32),
+        "feats": rng.normal(size=(g.n, d_feat)).astype(np.float32),
+        "labels": rng.integers(0, n_classes, g.n).astype(np.int32),
+    }
+    if with_positions:
+        batch["positions"] = rng.normal(size=(g.n, 3)).astype(np.float32) * 3
+        batch["species"] = rng.integers(0, 4, g.n).astype(np.int32)
+    return batch
+
+
+def batch_molecules(n_mols: int, n_nodes: int, n_edges: int, n_species: int,
+                    seed: int = 0) -> dict:
+    """Disjoint union of n_mols random molecules (fixed nodes/edges each)."""
+    rng = np.random.default_rng(seed)
+    N = n_mols * n_nodes
+    offsets = np.repeat(np.arange(n_mols) * n_nodes, n_edges)
+    e = rng.integers(0, n_nodes, size=(n_mols * n_edges, 2))
+    # symmetric arcs: both directions
+    src = np.concatenate([e[:, 0] + offsets, e[:, 1] + offsets]).astype(np.int32)
+    dst = np.concatenate([e[:, 1] + offsets, e[:, 0] + offsets]).astype(np.int32)
+    keep = src != dst
+    return {
+        "src": np.where(keep, src, 0),
+        "dst": np.where(keep, dst, 0),
+        "edge_mask": keep,
+        "node_mask": np.ones(N, bool),
+        "graph_id": np.repeat(np.arange(n_mols), n_nodes).astype(np.int32),
+        "positions": rng.normal(size=(N, 3)).astype(np.float32) * 2,
+        "species": rng.integers(0, n_species, N).astype(np.int32),
+        "labels": rng.normal(size=(n_mols,)).astype(np.float32),  # energies
+    }
+
+
+def batch_from_sampled(g: Graph, sub, d_feat: int, n_classes: int,
+                       feats: np.ndarray | None = None,
+                       labels: np.ndarray | None = None,
+                       seed: int = 0) -> dict:
+    """Flatten a sampler.SampledSubgraph into one padded edge-list batch.
+
+    Nodes = concatenation of all sampler layers (seeds first). Predictions
+    read the seed prefix."""
+    rng = np.random.default_rng(seed)
+    layer_sizes = [ln.shape[0] for ln in sub.layer_nodes]
+    starts = np.concatenate([[0], np.cumsum(layer_sizes)[:-1]])
+    all_nodes = np.concatenate(sub.layer_nodes)
+    node_mask = all_nodes >= 0
+    safe = np.where(node_mask, all_nodes, 0)
+    srcs, dsts, masks = [], [], []
+    for h, blk in enumerate(sub.blocks):
+        dsts.append(blk.dst_index + starts[h])
+        srcs.append(blk.src_index + starts[h + 1])
+        masks.append(blk.mask)
+    src = np.concatenate(srcs).astype(np.int32)
+    dst = np.concatenate(dsts).astype(np.int32)
+    emask = np.concatenate(masks)
+    if feats is None:
+        feats = rng.normal(size=(len(all_nodes), d_feat)).astype(np.float32)
+    else:
+        feats = feats[safe] * node_mask[:, None]
+    if labels is None:
+        labels = rng.integers(0, n_classes, len(all_nodes)).astype(np.int32)
+    else:
+        labels = labels[safe]
+    return {
+        # message direction: sampled neighbor (layer h+1) -> requester (h)
+        "src": src, "dst": dst,
+        "edge_mask": emask,
+        "node_mask": node_mask,
+        "graph_id": np.zeros(len(all_nodes), np.int32),
+        "feats": feats.astype(np.float32),
+        "labels": labels,
+        "positions": rng.normal(size=(len(all_nodes), 3)).astype(np.float32),
+        "species": rng.integers(0, 4, len(all_nodes)).astype(np.int32),
+        "n_seeds": np.int32(layer_sizes[0]),
+    }

@@ -1,0 +1,75 @@
+"""EGNN [arXiv:2102.09844] — E(n)-equivariant GNN.
+
+Per layer:  m_ij = phi_e(h_i, h_j, |x_i - x_j|^2)
+            x_i' = x_i + C * sum_j (x_i - x_j) phi_x(m_ij)
+            h_i' = phi_h(h_i, sum_j m_ij)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.util import scan_unroll
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import layernorm, mlp_apply, mlp_init, scatter_sum
+
+
+def init_params(cfg: GNNConfig, key, d_in: int | None = None):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 3 + 3 * cfg.n_layers)
+    params = {
+        "embed_species": jax.random.normal(
+            ks[0], (cfg.params["n_species"], d)) * 0.1,
+        "proj_in": mlp_init(ks[1], (d_in, d)) if d_in else None,
+        "readout": mlp_init(ks[2], (d, d, 1)),
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        params["blocks"].append({
+            "phi_e": mlp_init(ks[2 + 3 * i], (2 * d + 1, d, d)),
+            "phi_x": mlp_init(ks[3 + 3 * i], (d, d, 1)),
+            "phi_h": mlp_init(ks[4 + 3 * i], (2 * d, d, d)),
+        })
+    params["blocks"] = jax.tree.map(lambda *x: jnp.stack(x),
+                                    *params["blocks"]) \
+        if cfg.n_layers > 1 else jax.tree.map(lambda x: x[None],
+                                              params["blocks"][0])
+    return params
+
+
+def node_embeddings(params, cfg: GNNConfig, batch, return_pos=False):
+    n = batch["species"].shape[0]
+    h = jnp.take(params["embed_species"], batch["species"], axis=0)
+    if params.get("proj_in") is not None and "feats" in batch:
+        h = h + mlp_apply(params["proj_in"], batch["feats"].astype(h.dtype))
+    x = batch["positions"].astype(h.dtype)
+    src, dst = batch["src"], batch["dst"]
+    emask = batch["edge_mask"].astype(h.dtype)
+
+    def block(carry, bp):
+        h, x = carry
+        rel = x[dst] - x[src]
+        d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)
+        m = mlp_apply(bp["phi_e"], jnp.concatenate(
+            [h[dst], h[src], d2], axis=-1), final_act=True)
+        m = m * emask[:, None]
+        # coordinate update (normalized rel for stability)
+        wx = mlp_apply(bp["phi_x"], m)
+        xagg = scatter_sum(rel / (jnp.sqrt(d2) + 1) * wx, dst, n)
+        x = x + xagg / 8.0
+        magg = scatter_sum(m, dst, n)
+        h = h + mlp_apply(bp["phi_h"], jnp.concatenate([h, magg], axis=-1))
+        h = layernorm(h)   # stabilizes high-degree (non-molecular) graphs
+        return (h, x), None
+
+    (h, x), _ = jax.lax.scan(block, (h, x), params["blocks"],
+                             unroll=scan_unroll())
+    return (h, x) if return_pos else h
+
+
+def energy(params, cfg: GNNConfig, batch, n_graphs: int):
+    h = node_embeddings(params, cfg, batch)
+    e_atom = mlp_apply(params["readout"], h)[:, 0]
+    e_atom = e_atom * batch["node_mask"].astype(e_atom.dtype)
+    return scatter_sum(e_atom, batch["graph_id"], n_graphs)

@@ -1,0 +1,175 @@
+"""GraphCast [arXiv:2212.12794] — encoder-processor-decoder mesh GNN.
+
+Two operating modes:
+
+  * ``weather`` — the paper's own typed multigraph: grid nodes (lat x lon,
+    n_vars channels) -> encoder (grid2mesh block) -> 16 processor blocks on
+    the icosahedral multimesh -> decoder (mesh2grid block) -> per-grid-node
+    prediction of the n_vars channels. Used by the weather example/benchmark.
+
+  * ``generic`` — the assigned graph shapes (full_graph_sm / minibatch_lg /
+    ogb_products / molecule) are single untyped graphs: the same
+    InteractionBlock processor runs directly on the given edge list
+    (encoder/decoder become node MLPs). Documented in DESIGN.md §6.
+
+Every block is a GraphNet InteractionBlock (edge MLP -> segment-sum ->
+node MLP, residual, LayerNorm), the paper's exact block type.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.util import scan_unroll
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import layernorm, mlp_apply, mlp_init, scatter_sum
+
+
+def _block_init(key, d):
+    k1, k2 = jax.random.split(key)
+    return {
+        "edge_mlp": mlp_init(k1, (3 * d, d, d)),
+        "node_mlp": mlp_init(k2, (2 * d, d, d)),
+    }
+
+
+def _interaction(bp, h_src, h_dst, e, src, dst, n_dst, emask):
+    """One GraphNet block. Returns (new_h_dst, new_e)."""
+    from repro.models.gnn.common import (constrain_rows, gather_rows,
+                                         gather_rows_multi)
+    import os
+    if h_src is h_dst and not os.environ.get("REPRO_NO_GATHER_DEDUP"):
+        # generic mode: one broadcast serves both ends
+        hs, hd = gather_rows_multi(h_src, (src, dst))
+    else:
+        hs, hd = gather_rows(h_src, src), gather_rows(h_dst, dst)
+    eh = jnp.concatenate([e, hs, hd], axis=-1)
+    e_new = constrain_rows((e + mlp_apply(bp["edge_mlp"], eh)) *
+                           emask[:, None])
+    agg = constrain_rows(scatter_sum(e_new, dst, n_dst))
+    h_new = h_dst + mlp_apply(bp["node_mlp"],
+                              jnp.concatenate([h_dst, agg], axis=-1))
+    return constrain_rows(layernorm(h_new)), \
+        constrain_rows(layernorm(e_new) * emask[:, None])
+
+
+# ---------------------------------------------------------------------- #
+# Generic mode (assigned shapes)
+# ---------------------------------------------------------------------- #
+
+def init_params(cfg: GNNConfig, key, d_in: int | None = None):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [_block_init(ks[i], d) for i in range(cfg.n_layers)]
+    return {
+        "encode": mlp_init(ks[-3], (d_in or d, d, d)),
+        "edge_embed": jnp.zeros((1, d)),           # learned constant edge init
+        "blocks": jax.tree.map(lambda *x: jnp.stack(x), *blocks)
+        if cfg.n_layers > 1 else jax.tree.map(lambda x: x[None], blocks[0]),
+        "decode": mlp_init(ks[-2], (d, d, d)),
+    }
+
+
+def node_embeddings(params, cfg: GNNConfig, batch):
+    from repro.models.gnn.common import COMPUTE_DTYPE
+    n = batch["node_mask"].shape[0]
+    feats = batch.get("feats")
+    if feats is None:
+        feats = jax.nn.one_hot(batch["species"], cfg.d_hidden)
+    h = mlp_apply(params["encode"],
+                  feats.astype(COMPUTE_DTYPE))
+    src, dst = batch["src"], batch["dst"]
+    e = jnp.broadcast_to(params["edge_embed"].astype(COMPUTE_DTYPE),
+                         (src.shape[0], cfg.d_hidden))
+    emask = batch["edge_mask"].astype(h.dtype)
+
+    def block(carry, bp):
+        # checkpoint: never save per-layer (E, d) edge intermediates — the
+        # ogb_products cell has 124M edges (measured 167GB/dev without this).
+        h, e = jax.checkpoint(
+            lambda h_, e_, bp_: _interaction(bp_, h_, h_, e_, src, dst, n,
+                                             emask))(carry[0], carry[1], bp)
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(block, (h, e), params["blocks"],
+                             unroll=scan_unroll())
+    return mlp_apply(params["decode"], h)
+
+
+# ---------------------------------------------------------------------- #
+# Weather mode (the paper's own config)
+# ---------------------------------------------------------------------- #
+
+def make_weather_graph(cfg: GNNConfig, seed: int = 0) -> dict:
+    """Host-side synthetic multimesh wiring with the configured sizes.
+
+    Mesh connectivity is generated as a deterministic random regular-ish
+    graph of the configured edge count (the real icosahedral multimesh is a
+    constant that would ship as data; its sizes are what matter for
+    performance work)."""
+    p = cfg.params
+    rng = np.random.default_rng(seed)
+    n_grid = p["grid_lat"] * p["grid_lon"]
+    n_mesh = p["mesh_nodes"]
+    g2m = rng.integers(0, [[n_grid], [n_mesh]],
+                       size=(2, p["grid2mesh_edges"]))
+    mm = rng.integers(0, n_mesh, size=(2, p["mesh_edges"]))
+    m2g = rng.integers(0, [[n_mesh], [n_grid]],
+                       size=(2, p["mesh2grid_edges"]))
+    return {
+        "g2m_src": g2m[0].astype(np.int32), "g2m_dst": g2m[1].astype(np.int32),
+        "mm_src": mm[0].astype(np.int32), "mm_dst": mm[1].astype(np.int32),
+        "m2g_src": m2g[0].astype(np.int32), "m2g_dst": m2g[1].astype(np.int32),
+    }
+
+
+def init_weather_params(cfg: GNNConfig, key):
+    d = cfg.d_hidden
+    p = cfg.params
+    ks = jax.random.split(key, cfg.n_layers + 6)
+    blocks = [_block_init(ks[i], d) for i in range(cfg.n_layers)]
+    return {
+        "grid_encode": mlp_init(ks[-6], (p["n_vars"], d, d)),
+        "mesh_embed": jnp.zeros((1, d)),
+        "g2m": _block_init(ks[-5], d),
+        "blocks": jax.tree.map(lambda *x: jnp.stack(x), *blocks)
+        if cfg.n_layers > 1 else jax.tree.map(lambda x: x[None], blocks[0]),
+        "m2g": _block_init(ks[-4], d),
+        "grid_decode": mlp_init(ks[-3], (d, d, p["n_vars"])),
+    }
+
+
+def weather_forward(params, cfg: GNNConfig, grid_state, graph):
+    """grid_state: (n_grid, n_vars) -> next-state prediction (residual)."""
+    d = cfg.d_hidden
+    n_grid = grid_state.shape[0]
+    n_mesh = cfg.params["mesh_nodes"]
+    hg = mlp_apply(params["grid_encode"], grid_state.astype(jnp.float32))
+    hm = jnp.broadcast_to(params["mesh_embed"], (n_mesh, d))
+    ones = lambda e: jnp.ones((e.shape[0],), hg.dtype)
+
+    # encoder: grid -> mesh
+    e0 = jnp.zeros((graph["g2m_src"].shape[0], d), hg.dtype)
+    hm, _ = _interaction(params["g2m"], hg, hm, e0, graph["g2m_src"],
+                         graph["g2m_dst"], n_mesh, ones(graph["g2m_src"]))
+
+    # processor on the multimesh
+    em = jnp.zeros((graph["mm_src"].shape[0], d), hg.dtype)
+
+    def block(carry, bp):
+        hm, em = carry
+        hm, em = _interaction(bp, hm, hm, em, graph["mm_src"],
+                              graph["mm_dst"], n_mesh, ones(graph["mm_src"]))
+        return (hm, em), None
+
+    (hm, em), _ = jax.lax.scan(block, (hm, em), params["blocks"],
+                               unroll=scan_unroll())
+
+    # decoder: mesh -> grid
+    e1 = jnp.zeros((graph["m2g_src"].shape[0], d), hg.dtype)
+    hg2, _ = _interaction(params["m2g"], hm, hg, e1, graph["m2g_src"],
+                          graph["m2g_dst"], n_grid, ones(graph["m2g_src"]))
+    delta = mlp_apply(params["grid_decode"], hg2)
+    return grid_state + delta

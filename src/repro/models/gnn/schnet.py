@@ -1,0 +1,67 @@
+"""SchNet [arXiv:1706.08566] — continuous-filter convolutions.
+
+Interaction block: h_j --(atomwise)--> x_j; filter W(r_ij) = MLP(rbf(r_ij));
+message = x_j * W(r_ij); aggregate (segment_sum); atomwise MLP; residual.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.util import scan_unroll
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import (
+    gaussian_rbf, mlp_apply, mlp_init, scatter_sum)
+
+
+def init_params(cfg: GNNConfig, key, d_in: int | None = None):
+    d = cfg.d_hidden
+    p = cfg.params
+    ks = jax.random.split(key, 3 + 3 * cfg.n_layers)
+    params = {
+        "embed_species": jax.random.normal(ks[0], (p["n_species"], d)) * 0.1,
+        "proj_in": mlp_init(ks[1], (d_in, d)) if d_in else None,
+        "blocks": [],
+        "readout": mlp_init(ks[2], (d, d // 2, 1)),
+    }
+    for i in range(cfg.n_layers):
+        params["blocks"].append({
+            "filter": mlp_init(ks[3 + 3 * i], (p["n_rbf"], d, d)),
+            "in2f": mlp_init(ks[4 + 3 * i], (d, d)),
+            "out": mlp_init(ks[5 + 3 * i], (d, d, d)),
+        })
+    params["blocks"] = jax.tree.map(lambda *x: jnp.stack(x),
+                                    *params["blocks"]) \
+        if cfg.n_layers > 1 else jax.tree.map(lambda x: x[None],
+                                              params["blocks"][0])
+    return params
+
+
+def node_embeddings(params, cfg: GNNConfig, batch):
+    p = cfg.params
+    n = batch["species"].shape[0]
+    h = jnp.take(params["embed_species"], batch["species"], axis=0)
+    if params.get("proj_in") is not None and "feats" in batch:
+        h = h + mlp_apply(params["proj_in"], batch["feats"].astype(h.dtype))
+    rel = batch["positions"][batch["dst"]] - batch["positions"][batch["src"]]
+    dist = jnp.sqrt(jnp.sum(rel * rel, axis=-1) + 1e-12)
+    rbf = gaussian_rbf(dist, p["n_rbf"], p["cutoff"]).astype(h.dtype)
+    emask = batch["edge_mask"][:, None].astype(h.dtype)
+
+    def block(h, bp):
+        x = mlp_apply(bp["in2f"], h)
+        w = mlp_apply(bp["filter"], rbf) * emask
+        msg = x[batch["src"]] * w
+        agg = scatter_sum(msg, batch["dst"], n)
+        return h + mlp_apply(bp["out"], agg), None
+
+    h, _ = jax.lax.scan(block, h, params["blocks"], unroll=scan_unroll())
+    return h
+
+
+def energy(params, cfg: GNNConfig, batch, n_graphs: int):
+    h = node_embeddings(params, cfg, batch)
+    e_atom = mlp_apply(params["readout"], h)[:, 0]
+    e_atom = e_atom * batch["node_mask"].astype(e_atom.dtype)
+    return scatter_sum(e_atom, batch["graph_id"], n_graphs)

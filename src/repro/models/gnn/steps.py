@@ -1,0 +1,178 @@
+"""Train steps + dry-run input specs for the GNN family.
+
+All 4 assigned shapes lower to the GraphBatch layout (see common.py):
+  full_graph_sm / ogb_products — node CE over the whole graph;
+  minibatch_lg — node CE over the seed prefix of the sampled block;
+  molecule — per-graph energy MSE.
+
+Distribution: node/edge arrays sharded over ALL mesh axes flattened
+(P(("pod","data","model"))) — the graph engines are memory/collective bound,
+not matmul bound, so every chip takes a slice of edges; cross-shard feature
+gathers become all-gathers exactly like the k-core engine's estimate
+broadcast."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, ShapeSpec
+from repro.models.gnn import egnn, graphcast, mace, schnet
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+_MODELS = {"mace": mace, "schnet": schnet, "egnn": egnn,
+           "graphcast": graphcast}
+
+
+def model_module(cfg: GNNConfig):
+    return _MODELS[cfg.kind]
+
+
+def init_params(cfg: GNNConfig, key, d_in=None, n_classes: int = 0):
+    mod = model_module(cfg)
+    params = mod.init_params(cfg, key, d_in=d_in)
+    if n_classes:
+        k = jax.random.fold_in(key, 7)
+        params["classify"] = jax.random.normal(
+            k, (cfg.d_hidden, n_classes)) / math.sqrt(cfg.d_hidden)
+    return params
+
+
+def node_logits(params, cfg: GNNConfig, batch):
+    h = model_module(cfg).node_embeddings(params, cfg, batch)
+    return h @ params["classify"].astype(h.dtype)
+
+
+def _ce_loss(params, cfg, batch, predict_mask):
+    logits = node_logits(params, cfg, batch).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], axis=1)[:, 0]
+    m = predict_mask.astype(jnp.float32)
+    return jnp.sum((lse - gold) * m) / jnp.maximum(m.sum(), 1)
+
+
+def _energy_loss(params, cfg, batch, n_graphs):
+    mod = model_module(cfg)
+    if cfg.kind == "graphcast":           # no energy head: pool logits
+        h = mod.node_embeddings(params, cfg, batch)
+        e = jax.ops.segment_sum(
+            h.mean(-1) * batch["node_mask"], batch["graph_id"],
+            num_segments=n_graphs)
+    else:
+        e = mod.energy(params, cfg, batch, n_graphs)
+    return jnp.mean((e.astype(jnp.float32) - batch["labels"]) ** 2)
+
+
+def make_train_step(cfg: GNNConfig, shape: ShapeSpec,
+                    opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or AdamWConfig(lr=1e-3, weight_decay=0.0)
+    kind = shape.kind
+
+    def loss_fn(params, batch):
+        if kind == "molecule":
+            return _energy_loss(params, cfg, batch, shape.params["batch"])
+        if kind == "minibatch":
+            n = batch["node_mask"].shape[0]
+            pm = (jnp.arange(n) < shape.params["batch_nodes"]) & \
+                batch["node_mask"]
+            return _ce_loss(params, cfg, batch, pm)
+        return _ce_loss(params, cfg, batch, batch["node_mask"])
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------- #
+# Dry-run specs
+# ---------------------------------------------------------------------- #
+
+def _pad512(x: int) -> int:
+    """Round up: node arrays to a 512 multiple (lcm of both production
+    meshes), big edge arrays to 512*64 so MACE's power-of-two edge chunking
+    keeps 512-divisible chunks; masks make padding semantically inert."""
+    m = 512 * 64 if x > 4_000_000 else 512
+    return ((x + m - 1) // m) * m
+
+
+def batch_specs(cfg: GNNConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs of the GraphBatch for each assigned shape."""
+    f32, i32 = jnp.float32, jnp.int32
+    k = shape.kind
+    if k == "molecule":
+        B = shape.params["batch"]
+        N = _pad512(B * shape.params["n_nodes"])
+        E = _pad512(2 * B * shape.params["n_edges"])
+        d_feat, labels = None, jax.ShapeDtypeStruct((B,), f32)
+    elif k == "minibatch":
+        seeds = shape.params["batch_nodes"]
+        f = shape.params["fanout"]
+        sizes = [seeds]
+        for fo in f:
+            sizes.append(sizes[-1] * fo)
+        N = _pad512(sum(sizes))
+        E = _pad512(sum(sizes[i + 1] for i in range(len(f))))
+        d_feat = shape.params["d_feat"]
+        labels = jax.ShapeDtypeStruct((N,), i32)
+    else:
+        N = _pad512(shape.params["n_nodes"])
+        E = _pad512(2 * shape.params["n_edges"])
+        d_feat = shape.params["d_feat"]
+        labels = jax.ShapeDtypeStruct((N,), i32)
+    specs = {
+        "src": jax.ShapeDtypeStruct((E,), i32),
+        "dst": jax.ShapeDtypeStruct((E,), i32),
+        "edge_mask": jax.ShapeDtypeStruct((E,), jnp.bool_),
+        "node_mask": jax.ShapeDtypeStruct((N,), jnp.bool_),
+        "graph_id": jax.ShapeDtypeStruct((N,), i32),
+        "positions": jax.ShapeDtypeStruct((N, 3), f32),
+        "species": jax.ShapeDtypeStruct((N,), i32),
+        "labels": labels,
+    }
+    if d_feat:
+        specs["feats"] = jax.ShapeDtypeStruct((N, d_feat), f32)
+    return specs
+
+
+def n_classes_for(shape: ShapeSpec) -> int:
+    return int(shape.params.get("n_classes", 0))
+
+
+def build_train(cfg: GNNConfig, shape: ShapeSpec, mesh):
+    from repro.models.gnn.common import set_flat_sharding
+    set_flat_sharding(mesh, mesh.axis_names if mesh is not None else None)
+    step = make_train_step(cfg, shape)
+    bspecs = batch_specs(cfg, shape)
+    d_in = bspecs["feats"].shape[1] if "feats" in bspecs else None
+    pshapes = jax.eval_shape(
+        functools.partial(init_params, cfg, d_in=d_in,
+                          n_classes=n_classes_for(shape)),
+        jax.random.key(0))
+    specs = {"batch": bspecs, "_params": pshapes}
+    if mesh is None:
+        return step, specs, None, None
+    flat = P(tuple(mesh.axis_names))
+    def batch_spec_of(s):
+        return NamedSharding(mesh, flat if s.shape and s.shape[0] > 1024
+                             else P())
+    batch_sh = jax.tree.map(batch_spec_of, bspecs)
+    params_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), pshapes)
+    opt_sh = {"m": params_sh, "v": params_sh,
+              "count": NamedSharding(mesh, P())}
+    in_sh = (params_sh, opt_sh, batch_sh)
+    out_sh = (params_sh, opt_sh, NamedSharding(mesh, P()))
+    return step, specs, in_sh, out_sh
+
+
+# every assigned GNN shape lowers a train step
+build_step = build_train

@@ -1,0 +1,3 @@
+from repro.models.recsys import din, embedding_bag, steps
+
+__all__ = ["din", "embedding_bag", "steps"]

@@ -1,0 +1,85 @@
+"""DIN [arXiv:1706.06978] — Deep Interest Network.
+
+Target attention over the user behavior sequence: each history item is
+scored against the candidate item by an MLP over [h, t, h-t, h*t], weights
+(softmax-free, as in the paper: sigmoid-scaled) pool the history into a
+user-interest vector; concat with candidate + context -> prediction MLP.
+
+The embedding lookup (items 10^6 x 18, categories 10^4 x 18) is the hot
+path; tables are row-sharded over "model" (see steps.py)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.models.gnn.common import mlp_apply, mlp_init
+from repro.models.recsys.embedding_bag import embedding_bag
+
+
+def init_params(cfg: RecSysConfig, key):
+    D = cfg.embed_dim
+    ks = jax.random.split(key, 5)
+    feat_dim = 4 * 2 * D          # [h, t, h-t, h*t] over (item||cate) embeds
+    user_dim = 2 * D              # attention-pooled history
+    in_dim = user_dim + 2 * D + 2 * D   # user, target, context bag
+    return {
+        "item_emb": jax.random.normal(ks[0], (cfg.n_items, D)) * 0.01,
+        "cate_emb": jax.random.normal(ks[1], (cfg.n_cates, D)) * 0.01,
+        "attn": mlp_init(ks[2], (feat_dim, *cfg.attn_mlp, 1)),
+        "mlp": mlp_init(ks[3], (in_dim, *cfg.mlp, 1)),
+    }
+
+
+def _hist_embed(params, hist_items, hist_cates):
+    e_i = jnp.take(params["item_emb"], jnp.maximum(hist_items, 0), axis=0)
+    e_c = jnp.take(params["cate_emb"], jnp.maximum(hist_cates, 0), axis=0)
+    e = jnp.concatenate([e_i, e_c], axis=-1)            # (B, L, 2D)
+    return e * (hist_items >= 0)[..., None].astype(e.dtype)
+
+
+def user_vector(params, cfg: RecSysConfig, hist_items, hist_cates,
+                target_items, target_cates):
+    """Target attention pooling -> (B, 2D)."""
+    h = _hist_embed(params, hist_items, hist_cates)     # (B, L, 2D)
+    t_i = jnp.take(params["item_emb"], target_items, axis=0)
+    t_c = jnp.take(params["cate_emb"], target_cates, axis=0)
+    t = jnp.concatenate([t_i, t_c], axis=-1)[:, None, :]  # (B, 1, 2D)
+    tb = jnp.broadcast_to(t, h.shape)
+    feat = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)
+    score = mlp_apply(params["attn"], feat)[..., 0]     # (B, L)
+    score = jnp.where(hist_items >= 0, score, -1e30)
+    w = jax.nn.softmax(score.astype(jnp.float32), axis=-1).astype(h.dtype)
+    return jnp.einsum("bl,bld->bd", w, h), t[:, 0, :]
+
+
+def logits(params, cfg: RecSysConfig, batch):
+    """batch: hist_items/hist_cates (B, L), target_item/target_cate (B,),
+    context_bag (B, L_ctx) multi-hot cate ids (EmbeddingBag path)."""
+    u, t = user_vector(params, cfg, batch["hist_items"], batch["hist_cates"],
+                       batch["target_item"], batch["target_cate"])
+    ctx = embedding_bag(params["cate_emb"], batch["context_bag"], mode="sum")
+    ctx = jnp.concatenate([ctx, embedding_bag(
+        params["cate_emb"], batch["context_bag"], mode="mean")], axis=-1)
+    x = jnp.concatenate([u, t, ctx], axis=-1)
+    return mlp_apply(params["mlp"], x)[..., 0]
+
+
+def retrieval_scores(params, cfg: RecSysConfig, batch):
+    """Score ONE user against n_candidates items — batched dot + MLP over the
+    candidate matrix, never a loop. batch: hist_* (1, L), cand_items (N,),
+    cand_cates (N,)."""
+    u, _ = user_vector(params, cfg, batch["hist_items"], batch["hist_cates"],
+                       batch["cand_items"][:1], batch["cand_cates"][:1])
+    e_i = jnp.take(params["item_emb"], batch["cand_items"], axis=0)
+    e_c = jnp.take(params["cate_emb"], batch["cand_cates"], axis=0)
+    cand = jnp.concatenate([e_i, e_c], axis=-1)           # (N, 2D)
+    uN = jnp.broadcast_to(u, cand.shape)
+    # MLP input layout matches logits(): [user(2D), target(2D), ctx(2D)];
+    # retrieval has no context bag -> zeros.
+    ctx = jnp.zeros((cand.shape[0], 2 * cfg.embed_dim), cand.dtype)
+    x = jnp.concatenate([uN, cand, ctx], axis=-1)
+    return mlp_apply(params["mlp"], x)[..., 0]

@@ -1,0 +1,164 @@
+"""Train / serve / retrieval steps + dry-run specs for DIN.
+
+Sharding: embedding tables row-sharded over "model" (the 10^6-row item table
+is the dominant state); batch data-parallel over ("pod","data"); the lookup
+becomes a GSPMD gather over the table shards — the recsys analogue of the
+k-core estimate broadcast."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RecSysConfig, ShapeSpec
+from repro.models.recsys import din
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def param_specs(cfg: RecSysConfig) -> dict:
+    mlp_spec = [{"w": P(None, None), "b": P(None)}] * 0  # filled below
+    def mlp_of(sizes):
+        return [{"w": P(None, None), "b": P(None)} for _ in sizes]
+    import os
+    item_spec = P(("model", "data"), None) if \
+        os.environ.get("REPRO_DIN_FULLSHARD") else P("model", None)
+    return {
+        "item_emb": item_spec,
+        "cate_emb": P("model", None),
+        "attn": mlp_of(range(len(cfg.attn_mlp) + 1)),
+        "mlp": mlp_of(range(len(cfg.mlp) + 1)),
+    }
+
+
+def make_train_step(cfg: RecSysConfig, opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or AdamWConfig(lr=1e-3, weight_decay=0.0)
+
+    def loss_fn(params, batch):
+        lg = din.logits(params, cfg, batch).astype(jnp.float32)
+        y = batch["label"].astype(jnp.float32)
+        return jnp.mean(jnp.maximum(lg, 0) - lg * y +
+                        jnp.log1p(jnp.exp(-jnp.abs(lg))))
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: RecSysConfig):
+    def serve_step(params, batch):
+        return jax.nn.sigmoid(din.logits(params, cfg, batch))
+    return serve_step
+
+
+def make_retrieval_step(cfg: RecSysConfig, top_k: int = 100):
+    def retrieval_step(params, batch):
+        scores = din.retrieval_scores(params, cfg, batch)
+        vals, idx = jax.lax.top_k(scores, top_k)
+        return vals, idx
+    return retrieval_step
+
+
+# ---------------------------------------------------------------------- #
+# Specs + synthetic batches
+# ---------------------------------------------------------------------- #
+
+def batch_specs(cfg: RecSysConfig, shape: ShapeSpec) -> dict:
+    i32 = jnp.int32
+    if shape.kind == "retrieval":
+        # pad to a 512 multiple so the candidate shard divides both meshes
+        N = ((shape.params["n_candidates"] + 511) // 512) * 512
+        return {
+            "hist_items": jax.ShapeDtypeStruct((1, cfg.seq_len), i32),
+            "hist_cates": jax.ShapeDtypeStruct((1, cfg.seq_len), i32),
+            "cand_items": jax.ShapeDtypeStruct((N,), i32),
+            "cand_cates": jax.ShapeDtypeStruct((N,), i32),
+        }
+    B = shape.params["batch"]
+    specs = {
+        "hist_items": jax.ShapeDtypeStruct((B, cfg.seq_len), i32),
+        "hist_cates": jax.ShapeDtypeStruct((B, cfg.seq_len), i32),
+        "target_item": jax.ShapeDtypeStruct((B,), i32),
+        "target_cate": jax.ShapeDtypeStruct((B,), i32),
+        "context_bag": jax.ShapeDtypeStruct((B, 16), i32),
+    }
+    if shape.kind == "train":
+        specs["label"] = jax.ShapeDtypeStruct((B,), i32)
+    return specs
+
+
+def synth_batch(cfg: RecSysConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    sp = batch_specs(cfg, shape)
+    out = {}
+    for k, s in sp.items():
+        if k == "label":
+            out[k] = rng.integers(0, 2, s.shape).astype(np.int32)
+        elif "cate" in k or k == "context_bag":
+            out[k] = rng.integers(0, cfg.n_cates, s.shape).astype(np.int32)
+        else:
+            out[k] = rng.zipf(1.3, s.shape).clip(max=cfg.n_items - 1) \
+                .astype(np.int32) if "item" in k else \
+                rng.integers(0, cfg.n_items, s.shape).astype(np.int32)
+    # mark some history padding (ragged behavior lengths)
+    L = cfg.seq_len
+    lens = rng.integers(L // 4, L + 1, out["hist_items"].shape[0])
+    mask = np.arange(L)[None, :] < lens[:, None]
+    out["hist_items"] = np.where(mask, out["hist_items"], -1)
+    return out
+
+
+def build_step(cfg: RecSysConfig, shape: ShapeSpec, mesh):
+    specs = batch_specs(cfg, shape)
+    if shape.kind == "train":
+        step = make_train_step(cfg)
+        pshapes = jax.eval_shape(lambda k: din.init_params(cfg, k),
+                                 jax.random.key(0))
+        if mesh is None:
+            return step, specs, None, None
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           param_specs(cfg),
+                           is_leaf=lambda x: isinstance(x, P))
+        osh = {"m": psh, "v": psh, "count": NamedSharding(mesh, P())}
+        dp = _dp_axes(mesh)
+        bsh = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(dp, *([None] * (len(s.shape) - 1)))),
+            specs)
+        return step, specs, (psh, osh, bsh), \
+            (psh, osh, NamedSharding(mesh, P()))
+    if shape.kind == "serve":
+        step = make_serve_step(cfg)
+    else:
+        step = make_retrieval_step(cfg)
+    if mesh is None:
+        return step, specs, None, None
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(cfg),
+                       is_leaf=lambda x: isinstance(x, P))
+    dp = _dp_axes(mesh)
+    if shape.kind == "retrieval":
+        # candidates sharded over every axis; user history replicated
+        flat = tuple(mesh.axis_names)
+        bsh = {
+            "hist_items": NamedSharding(mesh, P(None, None)),
+            "hist_cates": NamedSharding(mesh, P(None, None)),
+            "cand_items": NamedSharding(mesh, P(flat)),
+            "cand_cates": NamedSharding(mesh, P(flat)),
+        }
+        out_sh = (NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    else:
+        bsh = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(dp, *([None] * (len(s.shape) - 1)))),
+            specs)
+        out_sh = NamedSharding(mesh, P(dp))
+    return step, specs, (psh, bsh), out_sh
+
+
+def _dp_axes(mesh):
+    d = tuple(a for a in mesh.axis_names if a != "model")
+    return d if len(d) > 1 else d[0]

@@ -1,0 +1,3 @@
+from repro.models.transformer import model, steps
+
+__all__ = ["model", "steps"]

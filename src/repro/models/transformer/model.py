@@ -1,0 +1,512 @@
+"""Decoder-only transformer stack (dense + MoE), pure JAX.
+
+Covers the five assigned LM architectures: GQA/MQA attention with RoPE and
+optional QKV bias, RMSNorm, SwiGLU or GELU MLP, Mixtral-style top-k MoE with
+capacity dispatch + optional shared experts, sliding-window attention, tied
+embeddings, KV-cache decode with rolling SWA buffer.
+
+Design notes
+  * Layers are stacked (L, ...) and iterated with lax.scan + jax.checkpoint
+    — keeps HLO size O(1) in depth and gives per-layer activation remat.
+  * Attention is evaluated in query chunks (scan) so the score matrix never
+    exceeds (B, H, q_chunk, S) — the XLA analogue of flash attention; the
+    Pallas flash kernel (kernels/flash_attention) is a drop-in for the TPU
+    runtime and is validated against the same reference in tests.
+  * All activation sharding is injected via distribution.ShardingRules; the
+    module is mesh-agnostic.
+  * Params are stored fp32 and cast to ``compute_dtype`` at use (bf16 on
+    TPU); RMSNorm/softmax/router run in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models.util import scan_unroll
+from repro.configs.base import LMConfig
+from repro.distribution.sharding import ShardingRules, constrain
+
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------- #
+# Initialization
+# ---------------------------------------------------------------------- #
+
+def init_params(cfg: LMConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    """Parameter pytree; stacked (L, ...) leaves for scan."""
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    d, L = cfg.d_model, cfg.n_layers
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    std = 0.02
+
+    def init(key, shape, scale=std):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+    ks = jax.random.split(k_layers, 16)
+    attn = {
+        "wq": init(ks[0], (L, d, hq * dh)),
+        "wk": init(ks[1], (L, d, hkv * dh)),
+        "wv": init(ks[2], (L, d, hkv * dh)),
+        "wo": init(ks[3], (L, hq * dh, d), scale=std / math.sqrt(2 * L)),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((L, hq * dh), dtype)
+        attn["bk"] = jnp.zeros((L, hkv * dh), dtype)
+        attn["bv"] = jnp.zeros((L, hkv * dh), dtype)
+    layers: dict[str, Any] = {
+        "attn": attn,
+        "norm1": jnp.ones((L, d), dtype),
+        "norm2": jnp.ones((L, d), dtype),
+    }
+    if cfg.moe:
+        # storage layout: E_eff = pad(E) * virtual_split experts of width
+        # f_eff = d_ff_expert / virtual_split (exact-math mesh divisibility;
+        # see configs.base.MoEConfig)
+        E, fe = cfg.moe.e_eff, cfg.moe.f_eff
+        moe = {
+            "router": init(ks[4], (L, d, cfg.moe.e_pad)),
+            "w_up": init(ks[5], (L, E, d, fe)),
+            "w_down": init(ks[6], (L, E, fe, d), scale=std / math.sqrt(2 * L)),
+        }
+        if cfg.mlp_type == "swiglu":
+            moe["w_gate"] = init(ks[7], (L, E, d, fe))
+        if cfg.moe.n_shared:
+            fs = cfg.moe.n_shared * fe
+            shared = {
+                "w_up": init(ks[8], (L, d, fs)),
+                "w_down": init(ks[9], (L, fs, d), scale=std / math.sqrt(2 * L)),
+            }
+            if cfg.mlp_type == "swiglu":
+                shared["w_gate"] = init(ks[10], (L, d, fs))
+            moe["shared"] = shared
+        layers["moe"] = moe
+    else:
+        f = cfg.d_ff
+        mlp = {
+            "w_up": init(ks[4], (L, d, f)),
+            "w_down": init(ks[5], (L, f, d), scale=std / math.sqrt(2 * L)),
+        }
+        if cfg.mlp_type == "swiglu":
+            mlp["w_gate"] = init(ks[6], (L, d, f))
+        layers["mlp"] = mlp
+    params = {
+        "embed": init(k_emb, (cfg.vocab, d)),
+        "layers": layers,
+        "norm_f": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init(k_head, (cfg.vocab, d))
+    return params
+
+
+# ---------------------------------------------------------------------- #
+# Building blocks
+# ---------------------------------------------------------------------- #
+
+def rmsnorm(x, w, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rope(x, pos, theta):
+    """x: (B, S, H, Dh), pos: (S,) — positions are shared across the batch
+    (continuous batching keeps ragged offsets outside the kernel), so all
+    position-derived tensors stay 1-D/2-D and never replicate a
+    (B, S, ...)-sized buffer on every device."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freq          # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]                   # (1, S, 1, half)
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attention_scores(q, k, v, q_pos, k_pos, window):
+    """q: (B, Q, Hkv, rep, Dh), k/v: (B, T, Hkv, Dh); q_pos (Q,), k_pos (T,)
+    absolute positions (shared across batch). Returns (B, Q, Hkv, rep, Dh).
+    (Grouped layout — used by the decode path.)"""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", q, k) / math.sqrt(dh)
+    mask = k_pos[None, :] <= q_pos[:, None]                # (Q, T)
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    mask = mask[None, None, None]                          # (1,1,1,Q,T)
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhrqk,bkhd->bqhrd", p, v)
+
+
+def _attention_scores_mha(q, k, v, q_pos, k_pos, window):
+    """Flat-head layout: q (B, Q, H, Dh), k/v (B, T, H, Dh) — KV expanded to
+    the full query-head count so the head dim shards cleanly over "model"
+    (kv-head counts like 8 do not divide a 16-way axis; GSPMD then falls
+    back to involuntary replication). Train/prefill path."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def attention(x, p, cfg: LMConfig, pos, rules: ShardingRules | None,
+              kv_cache=None, cache_pos=None, q_chunk: int = 512):
+    """Full-sequence (train/prefill) or single-token (decode) attention.
+
+    x: (B, S, d). pos: (S,) absolute positions (shared across batch).
+    kv_cache: None → self-attention over x (chunked over queries);
+    else dict {k, v} → decode against the cache (S == 1).
+    Returns (out, new_cache_or_None).
+    """
+    B, S, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    rep = hq // hkv
+    cd = x.dtype
+
+    def proj(w, b=None):
+        y = jnp.einsum("bsd,df->bsf", x, w.astype(cd))
+        if b is not None:
+            y = y + b.astype(cd)
+        return y
+
+    q = proj(p["wq"], p.get("bq")).reshape(B, S, hkv, rep, dh)
+    k = proj(p["wk"], p.get("bk")).reshape(B, S, hkv, dh)
+    v = proj(p["wv"], p.get("bv")).reshape(B, S, hkv, dh)
+    q = _rope(q.reshape(B, S, hkv * rep, dh), pos, cfg.rope_theta) \
+        .reshape(B, S, hkv, rep, dh)
+    k = _rope(k, pos, cfg.rope_theta)
+
+    if kv_cache is not None:
+        # ---- decode: S == 1, write into rolling cache ------------------- #
+        T = kv_cache["k"].shape[2]           # cache capacity
+        wpos = cache_pos if cfg.swa_window is None else cache_pos % T
+        ck = lax.dynamic_update_slice(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype).transpose(0, 2, 1, 3),
+            (0, 0, wpos, 0))
+        cv = lax.dynamic_update_slice(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype).transpose(0, 2, 1, 3),
+            (0, 0, wpos, 0))
+        if rules:
+            ck = constrain(ck, rules.kv_cache)
+            cv = constrain(cv, rules.kv_cache)
+        # absolute positions of cache slots (1-D — shared across batch)
+        slot = jnp.arange(T)
+        if cfg.swa_window is None:
+            k_pos_row = slot
+            valid = slot <= cache_pos
+        else:
+            # rolling buffer: slot holds absolute position p with
+            # p % T == slot, the largest such p <= cache_pos
+            k_pos_row = cache_pos - ((cache_pos - slot) % T)
+            valid = k_pos_row >= 0
+        k_pos = jnp.where(valid, k_pos_row, -1)
+        out = _attention_scores(
+            q, ck.transpose(0, 2, 1, 3).astype(cd),
+            cv.transpose(0, 2, 1, 3).astype(cd),
+            pos, k_pos, cfg.swa_window)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        # ---- train/prefill: chunked self-attention ---------------------- #
+        qc = min(q_chunk, S)
+        n_chunks = S // qc if S % qc == 0 else 1
+        if S % qc != 0:
+            qc = S
+        # Expand KV to the full query-head count (identity when rep == 1) so
+        # the head dim shards evenly over "model" — see _attention_scores_mha.
+        kf = jnp.repeat(k, rep, axis=2) if rep > 1 else k   # (B, S, hq, dh)
+        vf = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+        qf = q.reshape(B, S, hq, dh)
+        if rules:
+            qf = constrain(qf, rules.attn_q)
+            kf = constrain(kf, rules.attn_q)
+            vf = constrain(vf, rules.attn_q)
+        q_r = qf.reshape(B, n_chunks, qc, hq, dh)
+        pos_r = pos.reshape(n_chunks, qc)
+        # SWA: each q chunk only sees keys in [chunk_start - window, chunk
+        # end) — slice that window out instead of masking the full S
+        # (sub-quadratic compute and memory; exact because positions
+        # outside the window are masked anyway).
+        win = cfg.swa_window
+        use_slice = win is not None and S > 2 * win and qc + win < S
+
+        def chunk_body(carry, inp):
+            q_c, pos_c, idx = inp                  # (B, qc, hq, dh), (qc,)
+            if use_slice:
+                kv_len = qc + win
+                start = jnp.maximum(idx * qc - win, 0)
+                start = jnp.minimum(start, S - kv_len)
+                k_c = lax.dynamic_slice_in_dim(kf, start, kv_len, axis=1)
+                v_c = lax.dynamic_slice_in_dim(vf, start, kv_len, axis=1)
+                kpos_c = start + jnp.arange(kv_len)
+            else:
+                k_c, v_c, kpos_c = kf, vf, pos
+            # checkpoint: never save the (B, H, qc, S) probs for backward —
+            # recompute per chunk (flash-attention-style grad).
+            o = jax.checkpoint(_attention_scores_mha, static_argnums=(5,))(
+                q_c, k_c, v_c, pos_c, kpos_c, win)
+            return carry, o
+
+        _, outs = lax.scan(chunk_body, 0,
+                           (q_r.transpose(1, 0, 2, 3, 4), pos_r,
+                            jnp.arange(n_chunks)),
+                           unroll=scan_unroll())
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, hkv, rep, dh)
+        new_cache = None
+
+    out = out.reshape(B, S, hq * dh)
+    out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(cd))
+    return out, new_cache
+
+
+def mlp(x, p, cfg: LMConfig, rules):
+    cd = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cd))
+    if cfg.mlp_type == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    if rules:
+        h = constrain(h, rules.ffn_hidden)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd))
+
+
+def moe_block(x, p, cfg: LMConfig, rules):
+    """Top-k capacity-dispatch MoE — GShard-style einsum dispatch.
+
+    x: (B, S, d). Per-group capacity C = ceil(S*k/E * cf). Dispatch and
+    combine are one-hot EINSUMS (not scatter/gather: GSPMD reliably shards
+    dot_general, while batched scatter/gather fall back to replicated
+    64GB temporaries — measured, see EXPERIMENTS.md §Perf).
+
+    Expert parallelism: the E dim of the dispatch buffer and the expert
+    weights is sharded over "model" (GSPMD pads non-divisible E: 60 -> 64
+    is 7% waste; 8 -> 16 is 2x — the virtual-expert split below removes
+    it). Expert weights additionally FSDP-shard d over "data".
+    """
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, K = moe.e_pad, moe.top_k                 # E includes dummy pad experts
+    C = max(int(math.ceil(S * K / moe.n_experts * moe.capacity_factor)), 1)
+    cd = x.dtype
+
+    router_logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    if E > moe.n_experts:                       # dummy experts never selected
+        pad_mask = jnp.arange(E) >= moe.n_experts
+        router_logits = jnp.where(pad_mask, -1e30, router_logits)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_v, gate_i = lax.top_k(probs, K)                   # (B, S, K)
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    # slot assignment: position of each (token, k) selection within expert
+    sel = jax.nn.one_hot(gate_i.reshape(B, S * K), E, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(sel, axis=1) - sel               # (B, S*K, E)
+    pos_sel = jnp.take_along_axis(
+        pos_in_e, gate_i.reshape(B, S * K, 1), axis=2)[..., 0]
+    keep = pos_sel < C                                     # (B, S*K)
+
+    # one-hot dispatch/combine tensors (B, S, E_eff, C); virtual_split
+    # repeats each expert's slots across its half-width virtual experts —
+    # the combine sum over e then adds the halves (exact SwiGLU split).
+    oh_e = jax.nn.one_hot(gate_i, E, dtype=cd)             # (B, S, K, E)
+    if moe.virtual_split > 1:
+        oh_e = jnp.repeat(oh_e, moe.virtual_split, axis=-1)
+    oh_c = jax.nn.one_hot(
+        jnp.where(keep, pos_sel, C).reshape(B, S, K), C, dtype=cd)
+    dispatch = jnp.einsum("bske,bskc->bsec", oh_e, oh_c)
+    combine = jnp.einsum("bske,bskc,bsk->bsec", oh_e, oh_c,
+                         gate_v.astype(cd))
+    if rules:
+        dispatch = constrain(dispatch, rules.moe_dispatch)
+        x = constrain(x, rules.residual_decode if S == 1 else
+                      rules.moe_x)
+
+    buf = jnp.einsum("bsec,bsd->becd", dispatch, x)        # (B, E, C, d)
+    if rules:
+        buf = constrain(buf, rules.moe_buf)
+
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(cd))
+    if cfg.mlp_type == "swiglu":
+        gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(cd))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    if rules:
+        h = constrain(h, rules.moe_hidden)
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(cd))
+
+    out = jnp.einsum("bsec,becd->bsd", combine, y)
+
+    if moe.n_shared:
+        out = out + mlp(x, p["shared"], cfg, rules)
+
+    # load-balancing auxiliary loss (Switch-style), returned via aux
+    me = probs.mean(axis=(0, 1))                           # mean router prob
+    ce = sel.reshape(B, S, K, E).sum(2).mean(axis=(0, 1)) / K  # token fraction
+    aux = E * jnp.sum(me * ce)
+    return out, aux
+
+
+def layer_fn(x, lp, cfg: LMConfig, pos, rules, kv_cache=None, cache_pos=None):
+    h, new_cache = attention(rmsnorm(x, lp["norm1"], cfg.norm_eps),
+                             lp["attn"], cfg, pos, rules,
+                             kv_cache=kv_cache, cache_pos=cache_pos)
+    x = x + h
+    h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.moe:
+        h2, aux = moe_block(h2, lp["moe"], cfg, rules)
+    else:
+        h2, aux = mlp(h2, lp["mlp"], cfg, rules), jnp.float32(0)
+    x = x + h2
+    if rules:
+        spec = rules.residual if x.shape[1] > 1 else rules.residual_decode
+        x = constrain(x, spec)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------- #
+# Full passes
+# ---------------------------------------------------------------------- #
+
+def forward_hidden(params, cfg: LMConfig, tokens, rules=None):
+    """tokens (B, S) → final hidden states (B, S, d) bf16; aux loss."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    pos = jnp.arange(S)
+    if rules:
+        x = constrain(x, rules.residual)
+    policy = {"full": None,
+              "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+              "all_dots": jax.checkpoint_policies.dots_saveable,
+              }[cfg.remat_policy]
+
+    def body(x, lp):
+        x, _, aux = jax.checkpoint(
+            lambda x_, lp_: layer_fn(x_, lp_, cfg, pos, rules),
+            policy=policy)(x, lp)
+        return x, aux
+
+    x, auxs = lax.scan(body, x, params["layers"], unroll=scan_unroll())
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    return x, auxs.sum()
+
+
+def logits_from_hidden(params, cfg: LMConfig, h):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", h, head.astype(h.dtype))
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels, rules=None,
+            vocab_chunk: int = 8):
+    """Chunked cross-entropy: logits are materialized per sequence chunk so
+    the (tokens, vocab) matrix never exists in full. Returns mean CE."""
+    h, aux = forward_hidden(params, cfg, tokens, rules)
+    B, S, d = h.shape
+    n_chunks = min(vocab_chunk, S)
+    while S % n_chunks:
+        n_chunks -= 1
+    hc = h.reshape(B, n_chunks, S // n_chunks, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        h_c, l_c = inp
+        logits = logits_from_hidden(params, cfg, h_c).astype(jnp.float32)
+        if rules:
+            logits = constrain(logits, rules.logits_chunk)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        return carry + (lse - gold).sum(), None
+
+    total, _ = lax.scan(jax.checkpoint(chunk_loss), jnp.float32(0), (hc, lc),
+                        unroll=scan_unroll())
+    return total / (B * S) + 0.01 * aux
+
+
+# ---------------------------------------------------------------------- #
+# Serving passes
+# ---------------------------------------------------------------------- #
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int,
+                  dtype=COMPUTE_DTYPE) -> dict:
+    """Stacked (L, B, Hkv, T, Dh) cache; SWA archs cap T at the window."""
+    T = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, T, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params, cfg: LMConfig, token, cache, pos, rules=None):
+    """One decode step. token (B, 1) int32, pos scalar int32 (same position
+    for the whole batch — continuous batching handles ragged externally).
+    Returns (logits (B, vocab), new_cache)."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(COMPUTE_DTYPE)
+    posb = pos[None].astype(jnp.int32)          # (1,) — shared position
+
+    def body(x, lp_and_cache):
+        lp, ck, cv = lp_and_cache
+        x, new_cache, _ = layer_fn(x, lp, cfg, posb, rules,
+                                   kv_cache={"k": ck, "v": cv},
+                                   cache_pos=pos)
+        return x, (new_cache["k"], new_cache["v"])
+
+    x, (nk, nv) = lax.scan(body, x, (params["layers"], cache["k"],
+                                     cache["v"]), unroll=scan_unroll())
+    h = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, h)[:, 0, :]
+    return logits.astype(jnp.float32), {"k": nk, "v": nv}
+
+
+def prefill(params, cfg: LMConfig, tokens, rules=None):
+    """Full-sequence prefill building the KV cache; returns
+    (last-token logits (B, vocab), cache)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    pos = jnp.arange(S)
+    if rules:
+        x = constrain(x, rules.residual)
+
+    def body(x, lp):
+        def inner(x_, lp_):
+            h = rmsnorm(x_, lp_["norm1"], cfg.norm_eps)
+            # recompute k/v for the cache outside attention to keep the
+            # chunked attention path shared
+            hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            cd = x_.dtype
+            k = jnp.einsum("bsd,df->bsf", h, lp_["attn"]["wk"].astype(cd))
+            if cfg.qkv_bias:
+                k = k + lp_["attn"]["bk"].astype(cd)
+            k = _rope(k.reshape(B, S, hkv, dh), pos, cfg.rope_theta)
+            v = jnp.einsum("bsd,df->bsf", h, lp_["attn"]["wv"].astype(cd))
+            if cfg.qkv_bias:
+                v = v + lp_["attn"]["bv"].astype(cd)
+            v = v.reshape(B, S, hkv, dh)
+            x_, _, _ = layer_fn(x_, lp_, cfg, pos, rules)
+            if cfg.swa_window and S > cfg.swa_window:
+                k = k[:, -cfg.swa_window:]
+                v = v[:, -cfg.swa_window:]
+            return x_, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+        x, kv = jax.checkpoint(inner)(x, lp)
+        return x, kv
+
+    x, (ks, vs) = lax.scan(body, x, params["layers"], unroll=scan_unroll())
+    h = rmsnorm(x[:, -1:, :], params["norm_f"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, h)[:, 0, :]
+    cache = {"k": ks.astype(COMPUTE_DTYPE), "v": vs.astype(COMPUTE_DTYPE)}
+    return logits.astype(jnp.float32), cache

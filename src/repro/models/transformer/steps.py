@@ -1,0 +1,180 @@
+"""Train / prefill / decode steps for the LM family, plus dry-run specs.
+
+``build_*`` functions return (step_fn, input_specs, in_shardings,
+out_shardings) so launch/dryrun.py and launch/train.py share one code path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.distribution.sharding import lm_param_specs, lm_rules
+from repro.models.transformer import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_warmup
+
+
+def _named(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shapes(cfg: LMConfig) -> Any:
+    """ShapeDtypeStructs of the parameter pytree (no allocation)."""
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.key(0))
+
+
+def opt_shapes(cfg: LMConfig) -> Any:
+    return jax.eval_shape(lambda k: adamw_init(M.init_params(cfg, k)),
+                          jax.random.key(0))
+
+
+def opt_specs(cfg: LMConfig) -> Any:
+    ps = lm_param_specs(cfg)
+    return {"m": ps, "v": ps, "count": P()}
+
+
+# ---------------------------------------------------------------------- #
+# Train
+# ---------------------------------------------------------------------- #
+
+def make_train_step(cfg: LMConfig, rules, opt_cfg: AdamWConfig | None = None,
+                    total_steps: int = 10_000):
+    opt_cfg = opt_cfg or AdamWConfig()
+    M_ub = max(cfg.train_microbatches, 1)
+
+    def grads_of(params, tokens, labels):
+        return jax.value_and_grad(
+            lambda p: M.lm_loss(p, cfg, tokens, labels, rules))(params)
+
+    def train_step(params, opt_state, tokens, labels):
+        if M_ub == 1:
+            loss, grads = grads_of(params, tokens, labels)
+        else:
+            # gradient accumulation: activations scale with B/M_ub; the
+            # accumulator is f32 and inherits the (FSDP) param sharding.
+            B, S = tokens.shape
+            tok = tokens.reshape(M_ub, B // M_ub, S)
+            lab = labels.reshape(M_ub, B // M_ub, S)
+
+            def mb(carry, inp):
+                g_acc, l_acc = carry
+                loss_i, g_i = grads_of(params, *inp)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, g_i)
+                return (g_acc, l_acc + loss_i), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                mb, (zeros, jnp.float32(0)), (tok, lab))
+            grads = jax.tree.map(lambda g: g / M_ub, grads)
+            loss = loss / M_ub
+        lr_scale = cosine_warmup(opt_state["count"], warmup=100,
+                                 total=total_steps)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg, lr_scale)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_train(cfg: LMConfig, shape: ShapeSpec, mesh):
+    rules = lm_rules(mesh, cfg) if mesh is not None else None
+    step = make_train_step(cfg, rules)
+    B, S = shape.params["global_batch"], shape.params["seq_len"]
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if mesh is None:
+        return step, specs, None, None
+    pspecs = lm_param_specs(cfg)
+    in_sh = (_named(mesh, pspecs), _named(mesh, opt_specs(cfg)),
+             rules.tokens, rules.tokens)
+    out_sh = (_named(mesh, pspecs), _named(mesh, opt_specs(cfg)),
+              NamedSharding(mesh, P()))
+    return step, specs, in_sh, out_sh
+
+
+# ---------------------------------------------------------------------- #
+# Serve: prefill + decode
+# ---------------------------------------------------------------------- #
+
+def build_prefill(cfg: LMConfig, shape: ShapeSpec, mesh):
+    rules = lm_rules(mesh, cfg) if mesh is not None else None
+
+    def prefill_step(params, tokens):
+        return M.prefill(params, cfg, tokens, rules)
+
+    B, S = shape.params["global_batch"], shape.params["seq_len"]
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if mesh is None:
+        return prefill_step, specs, None, None
+    pspecs = lm_param_specs(cfg)
+    cache_sh = _stacked_cache_sharding(mesh, rules)
+    in_sh = (_named(mesh, pspecs), rules.tokens)
+    out_sh = (NamedSharding(mesh, P(_dp(rules), None)),
+              {"k": cache_sh, "v": cache_sh})
+    return prefill_step, specs, in_sh, out_sh
+
+
+def build_decode(cfg: LMConfig, shape: ShapeSpec, mesh):
+    rules = lm_rules(mesh, cfg) if mesh is not None else None
+
+    def decode_step(params, token, cache, pos):
+        return M.decode_step(params, cfg, token, cache, pos, rules)
+
+    B, S = shape.params["global_batch"], shape.params["seq_len"]
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_kv_cache(cfg, B, S))
+    specs = {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache_shapes,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if mesh is None:
+        return decode_step, specs, None, None
+    pspecs = lm_param_specs(cfg)
+    # batch 1 (long-context decode) cannot shard over the data axes —
+    # replicate the batch dim and rely on head/time sharding.
+    dp_size = int(np.prod([mesh.shape[a] for a in rules.data_axes]))
+    dp = _dp(rules) if B % dp_size == 0 else None
+    kv_spec = rules.kv_cache.spec
+    kv = NamedSharding(mesh, P(None, dp, *kv_spec[1:]))
+    cache_sh = {"k": kv, "v": kv}
+    in_sh = (_named(mesh, pspecs),
+             NamedSharding(mesh, P(dp, None)),
+             cache_sh, NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(dp, None)), cache_sh)
+    return decode_step, specs, in_sh, out_sh
+
+
+def _dp(rules):
+    d = rules.data_axes
+    return d if len(d) > 1 else d[0]
+
+
+def _stacked_cache_sharding(mesh, rules) -> NamedSharding:
+    """Cache is stacked (L, B, Hkv, T, Dh): prepend None to the per-layer
+    kv spec."""
+    return NamedSharding(mesh, P(None, *rules.kv_cache.spec))
+
+
+def build_step(cfg: LMConfig, shape: ShapeSpec, mesh):
+    kind = shape.kind
+    if kind == "train":
+        return build_train(cfg, shape, mesh)
+    if kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    if kind == "decode":
+        return build_decode(cfg, shape, mesh)
+    raise ValueError(f"unknown LM shape kind {kind}")

@@ -1,0 +1,17 @@
+"""Model-layer utilities."""
+
+from __future__ import annotations
+
+import os
+
+
+def scan_unroll():
+    """lax.scan ``unroll=`` argument for model loops.
+
+    The dry-run (launch/dryrun.py) sets REPRO_UNROLL_SCANS=1 so the lowered
+    module contains no while loops: XLA's HloCostAnalysis counts loop bodies
+    ONCE (trip counts ignored), which under-counts FLOPs/bytes/collectives by
+    the trip count; with full unroll the compiled-artifact analysis is exact.
+    Training/serving runs keep scans (unroll=1) for compile time and memory.
+    """
+    return True if os.environ.get("REPRO_UNROLL_SCANS", "0") == "1" else 1

@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_warmup
+from repro.optim.compression import (
+    topk_compress_decompress,
+    int8_compress_decompress,
+)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_warmup",
+           "topk_compress_decompress", "int8_compress_decompress"]

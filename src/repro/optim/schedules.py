@@ -1,0 +1,15 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, warmup: int, total: int, floor: float = 0.1):
+    """Scale in (0, 1]: linear warmup then cosine decay. step+1 so the very
+    first step already has a nonzero learning rate."""
+    step = step.astype(jnp.float32) + 1.0
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos

@@ -1,0 +1,3 @@
+from repro.runtime.driver import TrainDriver, TrainDriverConfig
+
+__all__ = ["TrainDriver", "TrainDriverConfig"]

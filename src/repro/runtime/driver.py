@@ -1,0 +1,110 @@
+"""Fault-tolerant training driver.
+
+Responsibilities at 1000+ node scale (and their single-host analogues used
+by tests):
+
+  * checkpoint/restart — periodic save via checkpoint/ (atomic commit);
+    startup always resumes from the latest COMMITTED step.
+  * failure handling — ``failure_injector`` simulates a host loss at a
+    given step (raises); the harness restarts the driver, which restores
+    and continues — tests assert bit-exact continuation.
+  * elastic scaling — restore re-shards onto whatever mesh the relaunch
+    provides (checkpoint format is mesh-agnostic).
+  * straggler mitigation — BSP steps are globally synchronous; the driver
+    tracks per-step wall time and flags outliers (on real fleets this feeds
+    the backup-worker / hot-spare policy; in the one-host simulation it is
+    surfaced as a metric). Data order is deterministic in (seed, step), so
+    a restarted/elastic run consumes identical batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+@dataclasses.dataclass
+class TrainDriverConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    straggler_factor: float = 3.0      # step_time > factor x median -> flag
+
+
+class TrainDriver:
+    def __init__(self, step_fn: Callable, init_state, batch_fn: Callable,
+                 config: TrainDriverConfig,
+                 failure_injector: Callable[[int], None] | None = None,
+                 state_shardings=None):
+        """step_fn(state, batch) -> (state, metrics);
+        batch_fn(step) -> batch (deterministic in step)."""
+        self.step_fn = step_fn
+        self.state = init_state
+        self.batch_fn = batch_fn
+        self.cfg = config
+        self.failure_injector = failure_injector
+        self.state_shardings = state_shardings
+        self.step = 0
+        self.step_times: list[float] = []
+        self.stragglers: list[int] = []
+        self.metrics_log: list[dict] = []
+
+    # -------------------------------------------------------------- #
+    def maybe_restore(self) -> bool:
+        last = latest_step(self.cfg.checkpoint_dir)
+        if last is None:
+            return False
+        self.state, self.step = restore_checkpoint(
+            self.cfg.checkpoint_dir, self.state,
+            shardings=self.state_shardings)
+        return True
+
+    def run(self) -> dict:
+        self.maybe_restore()
+        while self.step < self.cfg.total_steps:
+            if self.failure_injector is not None:
+                self.failure_injector(self.step)   # may raise HostFailure
+            t0 = time.perf_counter()
+            batch = self.batch_fn(self.step)
+            self.state, metrics = self.step_fn(self.state, batch)
+            jax.block_until_ready(jax.tree.leaves(self.state)[0])
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            med = float(np.median(self.step_times[-50:]))
+            if len(self.step_times) > 5 and dt > self.cfg.straggler_factor * med:
+                self.stragglers.append(self.step)
+            self.step += 1
+            if self.step % self.cfg.checkpoint_every == 0 or \
+                    self.step == self.cfg.total_steps:
+                save_checkpoint(self.cfg.checkpoint_dir, self.step, self.state)
+            if self.step % self.cfg.log_every == 0:
+                self.metrics_log.append(
+                    {k: float(v) for k, v in metrics.items()} |
+                    {"step": self.step, "step_time_s": dt})
+        return {
+            "final_step": self.step,
+            "stragglers": self.stragglers,
+            "metrics": self.metrics_log,
+        }
+
+
+class HostFailure(RuntimeError):
+    """Simulated node loss."""
+
+
+def make_failure_injector(fail_at_step: int):
+    fired = {"done": False}
+
+    def inject(step: int) -> None:
+        if step == fail_at_step and not fired["done"]:
+            fired["done"] = True
+            raise HostFailure(f"simulated host loss at step {step}")
+
+    return inject

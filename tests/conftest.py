@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — tests must see the real single device
+# (the 512-device override lives ONLY in repro.launch.dryrun).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,77 @@
+"""Hypothesis property tests for the k-core system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import KCoreConfig, bz_core_numbers, kcore_decompose
+from repro.core.kcore import _bs_iters
+from repro.graph.structs import Graph
+
+
+@st.composite
+def random_graphs(draw):
+    n = draw(st.integers(2, 60))
+    n_edges = draw(st.integers(0, 150))
+    edges = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=n_edges, max_size=n_edges))
+    return Graph.from_edges(np.asarray(edges, np.int64).reshape(-1, 2), n=n)
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graphs())
+def test_engine_equals_bz_on_random_graphs(g):
+    res = kcore_decompose(g)
+    assert res.converged
+    assert (res.core == bz_core_numbers(g)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs())
+def test_locality_theorem_at_fixpoint(g):
+    """Theorem II.1: core(u) = max k with >= k neighbors of core >= k."""
+    core = np.asarray(kcore_decompose(g).core)
+    for u in range(g.n):
+        nbr = core[g.neighbors(u)]
+        k = core[u]
+        assert (nbr >= k).sum() >= k
+        assert (nbr >= k + 1).sum() < k + 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs())
+def test_monotone_bounds(g):
+    """0 <= core <= deg, and core <= max over neighbors' degrees."""
+    res = kcore_decompose(g)
+    assert (res.core >= 0).all()
+    assert (res.core <= g.deg).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_graphs(), st.integers(2, 6))
+def test_block_gs_matches_for_any_block_count(g, nb):
+    ref = bz_core_numbers(g)
+    res = kcore_decompose(g, KCoreConfig(mode="block_gs", n_blocks=nb))
+    assert (res.core == ref).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_graphs())
+def test_subgraph_monotonicity(g):
+    """Removing edges never increases any core number."""
+    if g.m < 2:
+        return
+    core_full = np.asarray(kcore_decompose(g).core)
+    # drop half the (undirected) edges
+    keep = np.arange(g.m) % 2 == 0
+    und = np.stack([g.src, g.dst], 1)
+    und = und[und[:, 0] < und[:, 1]][keep]
+    g2 = Graph.from_edges(und, n=g.n)
+    core_sub = np.asarray(kcore_decompose(g2).core)
+    assert (core_sub <= core_full).all()
+
+
+def test_bs_iters_covers_range():
+    for md in [0, 1, 2, 3, 100, 38625]:
+        it = _bs_iters(md)
+        assert 2 ** it > md

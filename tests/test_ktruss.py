@@ -1,0 +1,30 @@
+"""k-truss extra (paper §V future work): BSP iteration vs peeling oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core.ktruss import ktruss_bsp, ktruss_peeling
+from repro.graph import generators as gen
+
+
+def test_complete_graph_truss():
+    """K5: every edge lies in 3 triangles -> truss number 5."""
+    truss = ktruss_peeling(gen.complete(5))
+    assert all(v == 5 for v in truss.values())
+
+
+def test_triangle_plus_tail():
+    from repro.graph.structs import Graph
+    g = Graph.from_edges([(0, 1), (1, 2), (0, 2), (2, 3)], n=4)
+    truss = ktruss_peeling(g)
+    assert truss[(0, 1)] == truss[(0, 2)] == truss[(1, 2)] == 3
+    assert truss[(2, 3)] == 2
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bsp_matches_peeling(seed):
+    g = gen.erdos_renyi(40, 140, seed=seed)
+    ref = ktruss_peeling(g)
+    est, stats = ktruss_bsp(g)
+    assert est == ref
+    assert stats.rounds >= 1
