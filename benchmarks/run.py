@@ -19,6 +19,7 @@ BENCHES = {
     "fig10": "benchmarks.fig10_runtime",
     "beyond_gs": "benchmarks.beyond_block_gs",
     "roofline": "benchmarks.roofline",
+    "streaming": "benchmarks.streaming_maintenance",
 }
 
 

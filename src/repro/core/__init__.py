@@ -9,6 +9,7 @@ from repro.core.kcore import (
     kcore_decompose,
     kcore_decompose_sharded,
     make_sharded_superstep,
+    masked_round_segment,
 )
 from repro.core.messages import MessageStats, heartbeat_overhead, work_bound
 
@@ -20,6 +21,7 @@ __all__ = [
     "kcore_decompose",
     "kcore_decompose_sharded",
     "make_sharded_superstep",
+    "masked_round_segment",
     "MessageStats",
     "heartbeat_overhead",
     "work_bound",

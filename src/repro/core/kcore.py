@@ -101,16 +101,32 @@ def _hindex_by_bsearch(est, est_dst_masked, src, n, n_iters):
 
 
 @functools.partial(jax.jit, static_argnames=("n", "n_iters"))
-def _round_segment(est, src, dst, arc_mask, n, n_iters):
-    """One Jacobi superstep. Returns (new_est, changed, received)."""
+def masked_round_segment(est, src, dst, arc_mask, active, n, n_iters):
+    """One frontier-masked Jacobi superstep. Returns (new_est, changed, recv).
+
+    Only vertices with ``active`` True recompute their h-index; everyone else
+    keeps their estimate. With ``active`` all-True this is the paper's plain
+    synchronous superstep. The masked form is the primitive the streaming
+    engine (repro.streaming.engine) iterates: after an edge-churn batch only
+    the frontier — vertices whose estimate may still drop — recomputes, which
+    is exact for the monotone locality operator (an inactive vertex's inputs
+    are unchanged, so recomputing it would be a no-op).
+    """
     est_dst = jnp.where(arc_mask, est[dst], 0)
-    new_est = _hindex_by_bsearch(est, est_dst, src, n, n_iters)
+    h = _hindex_by_bsearch(est, est_dst, src, n, n_iters)
+    new_est = jnp.where(active, h, est)
     changed = new_est < est
     # who receives a message next round: u s.t. some neighbor v changed
     recv = jax.ops.segment_sum(
         (jnp.where(arc_mask, changed[dst], False)).astype(jnp.int32),
         src, num_segments=n) > 0
     return new_est, changed, recv
+
+
+def _round_segment(est, src, dst, arc_mask, n, n_iters):
+    """One (unmasked) Jacobi superstep. Returns (new_est, changed, received)."""
+    active = jnp.ones(est.shape, bool)
+    return masked_round_segment(est, src, dst, arc_mask, active, n, n_iters)
 
 
 # ---------------------------------------------------------------------- #
@@ -340,11 +356,13 @@ def make_sharded_superstep(sg: ShardedGraph, mesh: jax.sharding.Mesh,
         any_changed = lax.psum(changed.any().astype(jnp.int32), axes) > 0
         return new_l[None], msgs, any_changed
 
+    from repro.distribution.compat import shard_map
+
     spec_state = P(axes)  # leading shard dim over all mesh axes
     in_specs = (spec_state, spec_state, spec_state, spec_state, spec_state)
     out_specs = (spec_state, P(), P())
-    sharded = jax.shard_map(superstep, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_vma=False)
+    sharded = shard_map(superstep, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
     shardings = {
         "state": NamedSharding(mesh, spec_state),
         "scalar": NamedSharding(mesh, P()),

@@ -1,0 +1,39 @@
+"""jax version compatibility shims.
+
+The repo pins jax 0.4.37 (the container's baked-in jax_pallas toolchain) but
+several distribution APIs moved across jax releases:
+
+  * ``jax.sharding.AxisType`` (and ``make_mesh(..., axis_types=...)``) only
+    exist on jax >= 0.5; on 0.4.x every mesh axis is implicitly Auto.
+  * ``jax.shard_map`` was promoted out of ``jax.experimental.shard_map``
+    and its replication-check kwarg renamed ``check_rep`` -> ``check_vma``.
+
+Everything in the repo that builds meshes or shard_maps goes through these
+two wrappers so the same code runs on the pinned 0.4.x and on newer jax.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]
+              ) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off, on any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

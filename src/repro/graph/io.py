@@ -35,11 +35,17 @@ def load_edge_list(path: str, n: int | None = None) -> Graph:
 def parse_json_adjacency(text: str) -> Graph:
     adj = json.loads(text)
     edges = []
+    max_id = -1
     for u, nbrs in adj.items():
         ui = int(u)
+        max_id = max(max_id, ui)
         for v in nbrs:
-            edges.append((ui, int(v)))
-    n = (max(int(u) for u in adj) + 1) if adj else 0
+            vi = int(v)
+            max_id = max(max_id, vi)
+            edges.append((ui, vi))
+    # n must cover vertices appearing only as neighbor values (an adjacency
+    # like {"0": [5]} is legal and means n = 6), not just the keys.
+    n = max_id + 1
     return Graph.from_edges(np.asarray(edges, np.int64).reshape(-1, 2), n=n)
 
 

@@ -51,11 +51,13 @@ def scatter_sum(values, index, n):
         return jax.lax.psum_scatter(full, axes, scatter_dimension=0,
                                     tiled=True)
 
+    from repro.distribution.compat import shard_map
+
     rest = (None,) * (values.ndim - 1)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(axes, *rest), P(axes)),
-        out_specs=P(axes, *rest), check_vma=False)(values, index)
+        out_specs=P(axes, *rest))(values, index)
 
 
 def gather_rows(h, idx):
@@ -79,11 +81,13 @@ def gather_rows_multi(h, idxs: tuple):
         hg = jax.lax.all_gather(h_l, axes, axis=0, tiled=True)
         return tuple(jnp.take(hg, i, axis=0) for i in i_l)
 
+    from repro.distribution.compat import shard_map
+
     rest = (None,) * (h.ndim - 1)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(axes, *rest),) + (P(axes),) * len(idxs),
-        out_specs=(P(axes, *rest),) * len(idxs), check_vma=False)(h, *idxs)
+        out_specs=(P(axes, *rest),) * len(idxs))(h, *idxs)
 
 
 def _mesh_size(mesh) -> int:

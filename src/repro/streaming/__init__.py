@@ -1,0 +1,35 @@
+"""Streaming k-core maintenance: batched edge churn, warm-started incremental
+re-convergence, and a batched core-number query server.
+
+The static engine (repro.core.kcore) pays a full decomposition per graph.
+This package layers dynamic-graph maintenance on top of it:
+
+  * ``delta``  — apply insert/delete edge batches to the COO/CSR Graph under
+    the paper's dataCleanse rules, reporting exactly what changed;
+  * ``engine`` — warm-start the locality iteration from the previous fixpoint
+    and re-converge only the affected frontier (provably exact, typically a
+    small fraction of the from-scratch message bill);
+  * ``server`` — interleave update batches with batched core-number /
+    membership / max-k queries (the paper's million-client scenario).
+"""
+
+from repro.streaming.delta import (DeltaResult, EdgeBatch, apply_batch,
+                                   canonical_edges, random_churn_batch)
+from repro.streaming.engine import (BatchResult, StreamingConfig,
+                                    StreamingKCoreEngine, warm_start_seed)
+from repro.streaming.server import KCoreServer, Request, Response
+
+__all__ = [
+    "EdgeBatch",
+    "DeltaResult",
+    "apply_batch",
+    "canonical_edges",
+    "random_churn_batch",
+    "StreamingConfig",
+    "StreamingKCoreEngine",
+    "BatchResult",
+    "warm_start_seed",
+    "KCoreServer",
+    "Request",
+    "Response",
+]

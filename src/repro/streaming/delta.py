@@ -1,0 +1,144 @@
+"""Mutable graph delta layer: batched edge insert/delete on the COO/CSR Graph.
+
+The static Graph is immutable (frozen dataclass); a churn batch produces a
+*new* Graph plus a precise report of what actually changed. The same
+dataCleanse rules as Graph.from_edges apply to the batch itself:
+
+  * self-loops in the batch are dropped;
+  * edges are undirected — (u, v) and (v, u) are the same edge, canonical
+    form is (min, max);
+  * inserting an edge that already exists is a no-op, as is deleting one
+    that doesn't; duplicates within the batch collapse.
+
+Deletes are applied before inserts, so a batch that deletes and inserts the
+same edge nets out to "edge present".
+
+Rebuild cost is O(m log m) per batch (one lexsort over the surviving edge
+set) — at the scales this repo benchmarks the host-side rebuild is noise
+next to the message bill the engine is measuring; a fully in-place CSR
+patch is an open item in ROADMAP.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph.structs import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeBatch:
+    """One churn batch: arrays of (u, v) pairs to delete and insert."""
+
+    insert: np.ndarray        # (Bi, 2) int64 — may be empty
+    delete: np.ndarray        # (Bd, 2) int64 — may be empty
+
+    @classmethod
+    def make(cls, insert=None, delete=None) -> "EdgeBatch":
+        def arr(x):
+            if x is None:
+                return np.zeros((0, 2), np.int64)
+            return np.asarray(x, np.int64).reshape(-1, 2)
+        return cls(insert=arr(insert), delete=arr(delete))
+
+    @property
+    def size(self) -> int:
+        return int(self.insert.shape[0] + self.delete.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaResult:
+    """Outcome of applying an EdgeBatch."""
+
+    graph: Graph              # the post-batch graph
+    inserted: np.ndarray      # (bi, 2) canonical edges actually added
+    deleted: np.ndarray       # (bd, 2) canonical edges actually removed
+    touched: np.ndarray       # sorted unique vertex ids incident to a change
+
+
+def canonical_edges(g: Graph) -> np.ndarray:
+    """The (m, 2) canonical (min < max) edge list of a Graph."""
+    half = g.src < g.dst
+    return np.stack([g.src[half].astype(np.int64),
+                     g.dst[half].astype(np.int64)], axis=1)
+
+
+def _canonicalize(pairs: np.ndarray) -> np.ndarray:
+    """dataCleanse a raw (B, 2) pair list: drop self-loops, canonical order,
+    dedupe."""
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+    if pairs.size == 0:
+        return pairs.reshape(0, 2)
+    canon = np.stack([pairs.min(axis=1), pairs.max(axis=1)], axis=1)
+    return np.unique(canon, axis=0)
+
+
+def _keys(edges: np.ndarray, n: int) -> np.ndarray:
+    """Encode canonical edges as scalar keys u * n + v for set algebra."""
+    return edges[:, 0] * np.int64(n) + edges[:, 1]
+
+
+def apply_batch(g: Graph, batch: EdgeBatch) -> DeltaResult:
+    """Apply a churn batch; returns the new Graph and the effective delta.
+
+    Vertex ids beyond g.n in the batch grow the vertex set (the new graph
+    has n = max(g.n, 1 + max id referenced)); deletes referencing unknown
+    vertices are no-ops.
+    """
+    ins = _canonicalize(batch.insert)
+    dele = _canonicalize(batch.delete)
+    if (ins.size and ins.min() < 0) or (dele.size and dele.min() < 0):
+        raise ValueError("negative vertex id in churn batch")
+    n = max(g.n, int(ins.max()) + 1 if ins.size else 0)
+    # key base must cover delete ids too (deleting an unknown vertex is a
+    # no-op, but its key must not alias a real edge's key)
+    base = max(n, int(dele.max()) + 1 if dele.size else 0)
+
+    edges = canonical_edges(g)
+    keys = _keys(edges, base)
+
+    # deletes first
+    if dele.size:
+        dk = _keys(dele, base)
+        hit = np.isin(keys, dk)
+        deleted = edges[hit]
+        edges, keys = edges[~hit], keys[~hit]
+    else:
+        deleted = np.zeros((0, 2), np.int64)
+
+    # then inserts (drop ones already present)
+    if ins.size:
+        fresh = ~np.isin(_keys(ins, base), keys)
+        inserted = ins[fresh]
+        edges = np.concatenate([edges, inserted])
+    else:
+        inserted = np.zeros((0, 2), np.int64)
+
+    new_g = Graph.from_edges(edges, n=n)
+    touched = np.unique(np.concatenate([inserted.reshape(-1),
+                                        deleted.reshape(-1)]))
+    return DeltaResult(graph=new_g, inserted=inserted, deleted=deleted,
+                       touched=touched.astype(np.int64))
+
+
+def random_churn_batch(g: Graph, n_insert: int, n_delete: int,
+                       rng: np.random.Generator) -> EdgeBatch:
+    """Sample a churn batch: ``n_delete`` existing edges chosen uniformly
+    without replacement, and ``n_insert`` uniform non-loop pairs (mostly new
+    edges; collisions with existing ones are legal no-op inserts)."""
+    edges = canonical_edges(g)
+    n_delete = min(n_delete, edges.shape[0])
+    if n_delete:
+        sel = rng.choice(edges.shape[0], size=n_delete, replace=False)
+        delete = edges[sel]
+    else:
+        delete = np.zeros((0, 2), np.int64)
+    if n_insert and g.n >= 2:
+        insert = rng.integers(0, g.n, size=(n_insert, 2), dtype=np.int64)
+        insert = insert[insert[:, 0] != insert[:, 1]]
+    else:
+        insert = np.zeros((0, 2), np.int64)
+    return EdgeBatch.make(insert=insert, delete=delete)

@@ -1,0 +1,400 @@
+"""Warm-started incremental k-core engine.
+
+Correctness rests on the locality theorem the static engine is built on
+(core/kcore.py, paper §II.B): iterating est'(u) = H({min(est(v), est(u))})
+converges to the exact core numbers from ANY per-vertex seed that upper
+bounds them. So after a churn batch the engine only has to produce a sound
+upper-bound seed — then frontier-localized supersteps re-converge exactly.
+
+Seeding rules (all sound, proofs in the docstrings below):
+
+  * a vertex whose core number cannot have increased keeps
+    ``min(old_core, new_deg)`` — deletions only lower cores, and the old
+    fixpoint is an upper bound of the new one outside the insertion region;
+  * vertices that MAY have increased — the insertion region R — are re-seeded
+    from a tight upper-bound vector computed by a batch generalization of
+    the single-edge subcore theorem: +1 passes over level-set components
+    anchored at inserted edges, pruned by a support peel
+    (see ``_insertion_upper_bound``).
+
+Message accounting mirrors core/messages.py: round 0 of a batch charges
+deg(u) for every vertex whose seed differs from its previously broadcast
+value (it must re-announce), plus 2 messages per inserted/deleted edge (the
+link handshake/teardown); every later round charges deg(u) per vertex whose
+estimate decreased. This makes "messages per batch" directly comparable to
+the from-scratch total the paper reports.
+
+Two frontier execution modes:
+
+  * ``dense``   — full-width jitted masked superstep (core.masked_round_segment):
+    one XLA program for the whole stream, frontier as a boolean mask;
+  * ``compact`` — per-round extraction of the active subgraph, padded to
+    powers of two so jit recompiles only O(log n) distinct shapes; work per
+    round is proportional to the frontier, not the graph.
+
+Both modes produce identical estimates and identical message counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kcore import (KCoreConfig, _bs_iters, _hindex_by_bsearch,
+                              _receivers_np, kcore_decompose,
+                              masked_round_segment)
+from repro.core.messages import MessageStats
+from repro.graph.structs import Graph
+from repro.streaming.delta import DeltaResult, EdgeBatch, apply_batch
+
+
+# ---------------------------------------------------------------------- #
+# Config / result
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class StreamingConfig:
+    frontier: str = "dense"          # "dense" | "compact"
+    max_rounds: int | None = None    # None -> n + 1 per batch (worst case)
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Outcome of one incremental batch."""
+
+    core: np.ndarray          # exact core numbers after the batch
+    rounds: int               # supersteps to re-converge (excl. seed round)
+    converged: bool
+    stats: MessageStats       # per-round accounting; [0] = seed broadcast
+    delta: DeltaResult        # what the batch actually changed
+    region_size: int          # |R| — insertion region that was re-seeded up
+    seed_changed: int         # vertices that had to rebroadcast at seed time
+
+    @property
+    def total_messages(self) -> int:
+        return self.stats.total_messages
+
+
+# ---------------------------------------------------------------------- #
+# Warm-start seeding
+# ---------------------------------------------------------------------- #
+
+def _insertion_upper_bound(new_g: Graph, old_core_ext: np.ndarray,
+                           inserted: np.ndarray) -> np.ndarray:
+    """Pointwise upper bound U >= new core numbers, tight around insertions.
+
+    Batch generalization of the classic single-edge subcore theorem
+    (Sariyuce et al., "Streaming algorithms for k-core decomposition"):
+    inserting ONE edge (u, v) into a graph with exact cores c raises core
+    numbers by at most 1, and only for vertices x with c(x) = k =
+    min(c(u), c(v)) reachable from an endpoint through vertices of core k.
+
+    We iterate +1 "passes" over an evolving bound vector U (initialized to
+    the pre-batch exact cores, so U >= cores holds at the start):
+
+      pass: a vertex x is RAISED by 1 iff
+        (a) its component in the level set G_{>=U(x)} = {y : U(y) >= U(x)}
+            (computed in the post-batch graph) contains an endpoint of an
+            inserted edge e with min(U(u_e), U(v_e)) >= U(x); and
+        (b) new_deg(x) > U(x) (a core number never exceeds the degree); and
+        (c) x survives a support peel: iteratively discard candidates with
+            fewer than U(x)+1 neighbors that are either candidates at the
+            same level or have U > U(x) (a vertex cannot sit in a
+            (U(x)+1)-core without U(x)+1 qualified neighbors).
+
+    Passes repeat until no vertex is raised. Soundness (U_final >= new
+    cores): induct over a sequential replay — deletions first (cores only
+    drop, so U_0 = old cores stays an upper bound), then insertions one at
+    a time. If the i-th insertion truly raises x from c_i(x) and
+    U(x) = c_i(x) still, then the true subcore path (core values exactly
+    c_i(x)) is a path in the level set G_{>=U(x)} because U >= c_i
+    pointwise, the raising edge has min-endpoint-bound >= c_i(x), x's true
+    (c_i(x)+1)-core membership forces >= U(x)+1 qualified neighbors (each
+    with final core > U(x), hence eventually U > U(x) or a same-level
+    candidate), and its degree exceeds U(x) — so a later pass raises x.
+    The level-set connectivity is evaluated in the final graph, a supergraph
+    of every intermediate one, which only enlarges components (safe: over-
+    approximating raises costs extra seed broadcasts, never correctness).
+
+    Complexity per pass: one arc sort + union-find sweep over levels,
+    O(m alpha) plus the peel, all host-side numpy; the number of passes is
+    bounded by the largest true core increase (1-2 for realistic churn).
+    """
+    n = new_g.n
+    U = old_core_ext.astype(np.int64).copy()
+    if inserted.size == 0 or n == 0:
+        return U
+    cap = new_g.deg.astype(np.int64)
+    src, dst, offsets = new_g.src, new_g.dst, new_g.offsets
+    half = src < dst
+    e_u = src[half].astype(np.int64)
+    e_v = dst[half].astype(np.int64)
+    ins_u, ins_v = inserted[:, 0], inserted[:, 1]
+
+    parent = np.zeros(n, np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:        # path compression
+            parent[x], x = root, parent[x]
+        return int(root)
+
+    while True:
+        # --- per-pass structures on the current bound vector U ---------- #
+        k_ins = np.minimum(U[ins_u], U[ins_v])
+        A = np.full(n, -1, np.int64)    # best inserted-edge level per vertex
+        np.maximum.at(A, ins_u, k_ins)
+        np.maximum.at(A, ins_v, k_ins)
+        lev_arc = np.minimum(U[e_u], U[e_v])
+        arc_order = np.argsort(-lev_arc, kind="stable")
+        vert_order = np.argsort(-U, kind="stable")
+
+        parent[:] = np.arange(n)
+        M = A.copy()                    # per-root max inserted-edge level
+        marked = np.zeros(n, bool)
+
+        ai, vi = 0, 0
+        n_arcs = arc_order.shape[0]
+        while vi < n:
+            L = int(U[vert_order[vi]])
+            # activate all arcs of the level set G_{>=L}
+            while ai < n_arcs and lev_arc[arc_order[ai]] >= L:
+                a = arc_order[ai]
+                ra, rb = find(int(e_u[a])), find(int(e_v[a]))
+                if ra != rb:
+                    parent[ra] = rb
+                    M[rb] = max(M[rb], M[ra])
+                ai += 1
+            # candidates at level L: connected to a qualifying insertion
+            cand = []
+            while vi < n and U[vert_order[vi]] == L:
+                x = int(vert_order[vi])
+                vi += 1
+                if cap[x] > L and M[find(x)] >= L:
+                    cand.append(x)
+            if not cand:
+                continue
+            # support peel: survivors need >= L+1 neighbors with U > L or
+            # surviving candidates at this level
+            in_c = np.zeros(n, bool)
+            in_c[cand] = True
+            s = {x: int(np.count_nonzero(
+                    (U[dst[offsets[x]:offsets[x + 1]]] > L)
+                    | in_c[dst[offsets[x]:offsets[x + 1]]]))
+                 for x in cand}
+            stack = [x for x in cand if s[x] <= L]
+            while stack:
+                x = stack.pop()
+                if not in_c[x]:
+                    continue
+                in_c[x] = False
+                for y in dst[offsets[x]:offsets[x + 1]]:
+                    y = int(y)
+                    if in_c[y]:
+                        s[y] -= 1
+                        if s[y] == L:
+                            stack.append(y)
+            marked |= in_c
+        if not marked.any():
+            return U
+        U[marked] += 1
+
+
+def warm_start_seed(new_g: Graph, old_core: np.ndarray, delta: DeltaResult
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Sound upper-bound seed for the new graph's core numbers.
+
+    Returns (seed, region): seed (n,) int32 with seed >= new core pointwise;
+    region (n,) bool marks the insertion region that was re-seeded upward.
+    Outside the region the seed is min(old_core, new_deg) — deletions only
+    lower cores, so the previous fixpoint stays an upper bound there.
+    """
+    n = new_g.n
+    old_core_ext = np.zeros(n, np.int64)
+    old_core_ext[: old_core.shape[0]] = old_core  # new vertices: old core 0
+    new_deg = new_g.deg.astype(np.int64)
+
+    U = _insertion_upper_bound(new_g, old_core_ext, delta.inserted)
+    seed = np.minimum(U, new_deg)
+    region = U > old_core_ext
+    return seed.astype(np.int32), region
+
+
+# ---------------------------------------------------------------------- #
+# Frontier-localized re-convergence
+# ---------------------------------------------------------------------- #
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("n", "n_iters"))
+def _compact_kernel(est_u, est_dst_masked, src, n, n_iters):
+    """h-index over a pre-gathered compact frontier subproblem."""
+    new = _hindex_by_bsearch(est_u, est_dst_masked, src, n, n_iters)
+    return new, new < est_u
+
+
+def _compact_round(g: Graph, est: np.ndarray, active: np.ndarray,
+                   n_iters: int) -> tuple[np.ndarray, np.ndarray]:
+    """One superstep touching only the active subgraph.
+
+    Extracts the arcs sourced at active vertices, remaps them to a dense
+    [0, n_act) segment space padded to powers of two (so jit sees O(log n)
+    shapes over the whole stream), gathers the neighbor estimates host-side
+    (neighbors may be inactive — their values come from the full vector),
+    and runs the same binary-search h-index as the full-width path.
+    Returns (new_est, changed) full-size.
+    """
+    act_ids = np.flatnonzero(active)
+    if act_ids.size == 0:
+        return est, np.zeros(g.n, bool)
+    arc_sel = active[g.src]
+    sub_src = np.searchsorted(act_ids, g.src[arc_sel]).astype(np.int32)
+    sub_dst_est = est[g.dst[arc_sel]].astype(np.int32)
+
+    n_act_pad = _next_pow2(act_ids.size)
+    arc_pad = _next_pow2(max(sub_src.size, 1))
+    est_u = np.zeros(n_act_pad, np.int32)
+    est_u[: act_ids.size] = est[act_ids]
+    src_pad = np.full(arc_pad, n_act_pad - 1, np.int32)
+    src_pad[: sub_src.size] = sub_src
+    dst_est_pad = np.zeros(arc_pad, np.int32)   # 0 never counts for k >= 1
+    dst_est_pad[: sub_src.size] = sub_dst_est
+
+    new_sub, changed_sub = _compact_kernel(
+        jnp.asarray(est_u), jnp.asarray(dst_est_pad), jnp.asarray(src_pad),
+        n_act_pad, n_iters)
+
+    new_est = est.copy()
+    new_est[act_ids] = np.asarray(new_sub)[: act_ids.size]
+    changed = np.zeros(g.n, bool)
+    changed[act_ids] = np.asarray(changed_sub)[: act_ids.size]
+    return new_est, changed
+
+
+# ---------------------------------------------------------------------- #
+# The engine
+# ---------------------------------------------------------------------- #
+
+class StreamingKCoreEngine:
+    """Maintains exact core numbers of a mutating graph.
+
+    ``__init__`` pays one static decomposition; every ``apply_batch`` then
+    re-converges incrementally from the previous fixpoint. ``self.core`` is
+    exact after every batch (tested against the BZ oracle).
+    """
+
+    def __init__(self, g: Graph, config: StreamingConfig = StreamingConfig(),
+                 kcore_config: KCoreConfig = KCoreConfig()):
+        if config.frontier not in ("dense", "compact"):
+            raise ValueError(f"unknown frontier mode {config.frontier!r}")
+        self.config = config
+        self.graph = g
+        init = kcore_decompose(g, kcore_config)
+        self.core = init.core.astype(np.int32)
+        self.init_result = init
+        self.batches_applied = 0
+
+    # ------------------------------------------------------------------ #
+    def apply_batch(self, batch: EdgeBatch) -> BatchResult:
+        delta = apply_batch(self.graph, batch)
+        g = delta.graph
+        n = g.n
+        seed, region = warm_start_seed(g, self.core, delta)
+
+        old_core_ext = np.zeros(n, np.int32)
+        old_core_ext[: self.core.shape[0]] = self.core
+        deg64 = g.deg.astype(np.int64)
+
+        # ---- round 0: seed broadcast + link handshakes ---------------- #
+        seed_changed = seed != old_core_ext
+        msgs = [int(deg64[seed_changed].sum())
+                + 2 * int(delta.inserted.shape[0])
+                + 2 * int(delta.deleted.shape[0])]
+        changed_counts = [int(seed_changed.sum())]
+
+        # ---- initial frontier ----------------------------------------- #
+        # recompute u iff its h-index inputs changed: an incident edge
+        # appeared/disappeared, or a neighbor's broadcast value changed.
+        active = np.zeros(n, bool)
+        touched = delta.touched[delta.touched < n]
+        active[touched] = True
+        active |= seed_changed
+        active |= _receivers_np(g, seed_changed)
+        # active_per_round follows the static engine's convention:
+        # [r] = vertices recomputing/broadcasting in round r. Round 0 is the
+        # seed rebroadcast; round 1's recomputers are the initial frontier.
+        actives = [int(seed_changed.sum()), int(active.sum())]
+
+        est = seed
+        rounds, converged = 0, False
+        cap = (self.config.max_rounds if self.config.max_rounds is not None
+               else n + 1)
+        n_iters = _bs_iters(g.max_deg)
+
+        if self.config.frontier == "dense":
+            # pad arcs to a power of two so the jitted superstep recompiles
+            # only O(log m) times over the whole update stream
+            arc_pad = _next_pow2(max(g.num_arcs, 1))
+            src_np = np.zeros(arc_pad, np.int32)
+            src_np[: g.num_arcs] = g.src
+            dst_np = np.zeros(arc_pad, np.int32)
+            dst_np[: g.num_arcs] = g.dst
+            amask_np = np.zeros(arc_pad, bool)
+            amask_np[: g.num_arcs] = True
+            est_j = jnp.asarray(est)
+            src_j = jnp.asarray(src_np)
+            dst_j = jnp.asarray(dst_np)
+            amask = jnp.asarray(amask_np)
+            while rounds < cap and active.any():
+                new_j, changed_j, recv_j = masked_round_segment(
+                    est_j, src_j, dst_j, amask, jnp.asarray(active),
+                    n, n_iters)
+                rounds += 1
+                ch = np.asarray(changed_j)
+                if not ch.any():
+                    converged = True
+                    break
+                msgs.append(int(deg64[ch].sum()))
+                changed_counts.append(int(ch.sum()))
+                active = np.asarray(recv_j)   # next frontier, from the device
+                actives.append(int(active.sum()))
+                est_j = new_j
+            est = np.asarray(est_j)
+        else:  # compact
+            while rounds < cap and active.any():
+                new_est, ch = _compact_round(g, est, active, n_iters)
+                rounds += 1
+                if not ch.any():
+                    converged = True
+                    break
+                msgs.append(int(deg64[ch].sum()))
+                changed_counts.append(int(ch.sum()))
+                active = _receivers_np(g, ch)
+                actives.append(int(active.sum()))
+                est = new_est
+        if not active.any():
+            converged = True
+
+        core = np.asarray(est, np.int32)
+        stats = MessageStats(
+            messages_per_round=np.asarray(msgs, np.int64),
+            active_per_round=np.asarray(actives[: len(msgs)], np.int64),
+            changed_per_round=np.asarray(changed_counts[: len(msgs)],
+                                         np.int64),
+        )
+        self.graph = g
+        self.core = core
+        self.batches_applied += 1
+        return BatchResult(core=core, rounds=rounds, converged=converged,
+                           stats=stats, delta=delta,
+                           region_size=int(region.sum()),
+                           seed_changed=int(seed_changed.sum()))

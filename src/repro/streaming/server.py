@@ -1,0 +1,135 @@
+"""Core-number query server: update batches interleaved with batched queries.
+
+Models the paper's million-client scenario from the serving side: clients do
+not run the decomposition, they ask a maintained index. The server owns a
+StreamingKCoreEngine; updates mutate the graph and incrementally re-converge,
+queries are O(1)/O(n) numpy reads of the maintained fixpoint — so query
+latency is decoupled from graph size and churn entirely.
+
+Request/Response are plain dataclasses (not wire formats): launch/kcore_serve
+drives the loop from a CLI, and a real transport would marshal the same ops.
+
+Supported ops
+  * ``core``      — core numbers for a batch of vertex ids;
+  * ``in_kcore``  — k-core membership for a batch of vertex ids;
+  * ``members``   — all vertices of the k-core;
+  * ``max_k``     — the degeneracy (largest non-empty k);
+  * ``update``    — apply an EdgeBatch through the incremental engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.core.kcore import KCoreConfig
+from repro.graph.structs import Graph
+from repro.streaming.delta import EdgeBatch
+from repro.streaming.engine import (BatchResult, StreamingConfig,
+                                    StreamingKCoreEngine)
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    op: str                       # core | in_kcore | members | max_k | update
+    vertices: np.ndarray | None = None   # core / in_kcore
+    k: int | None = None                 # in_kcore / members
+    batch: EdgeBatch | None = None       # update
+
+
+@dataclasses.dataclass
+class Response:
+    op: str
+    payload: Any
+    wall_s: float
+
+
+class KCoreServer:
+    """Serving facade over the incremental maintenance engine."""
+
+    def __init__(self, g: Graph, config: StreamingConfig = StreamingConfig(),
+                 kcore_config: KCoreConfig = KCoreConfig()):
+        self.engine = StreamingKCoreEngine(g, config, kcore_config)
+        self.queries_served = 0
+        self.clients_answered = 0     # total vertex ids answered
+        self.updates_applied = 0
+        self.update_messages = 0
+        self.update_rounds = 0
+        self.query_wall_s = 0.0
+        self.update_wall_s = 0.0
+
+    # ---------------- queries (reads of the maintained fixpoint) -------- #
+    @property
+    def core(self) -> np.ndarray:
+        return self.engine.core
+
+    def core_number(self, vertices) -> np.ndarray:
+        v = np.asarray(vertices, np.int64).reshape(-1)
+        self._check_ids(v)
+        return self.core[v]
+
+    def in_kcore(self, vertices, k: int) -> np.ndarray:
+        return self.core_number(vertices) >= int(k)
+
+    def kcore_members(self, k: int) -> np.ndarray:
+        return np.flatnonzero(self.core >= int(k))
+
+    def max_k(self) -> int:
+        return int(self.core.max()) if self.core.size else 0
+
+    def _check_ids(self, v: np.ndarray) -> None:
+        if v.size and (v.min() < 0 or v.max() >= self.engine.graph.n):
+            raise IndexError("vertex id out of range")
+
+    # ---------------- updates ------------------------------------------ #
+    def update(self, batch: EdgeBatch) -> BatchResult:
+        t0 = time.perf_counter()
+        res = self.engine.apply_batch(batch)
+        self.update_wall_s += time.perf_counter() - t0
+        self.updates_applied += 1
+        self.update_messages += res.total_messages
+        self.update_rounds += res.rounds
+        return res
+
+    # ---------------- request loop ------------------------------------- #
+    def serve(self, requests: Iterable[Request]) -> list[Response]:
+        out = []
+        for req in requests:
+            t0 = time.perf_counter()
+            if req.op == "core":
+                payload = self.core_number(req.vertices)
+                self.clients_answered += payload.size
+            elif req.op == "in_kcore":
+                payload = self.in_kcore(req.vertices, req.k)
+                self.clients_answered += payload.size
+            elif req.op == "members":
+                payload = self.kcore_members(req.k)
+            elif req.op == "max_k":
+                payload = self.max_k()
+            elif req.op == "update":
+                payload = self.update(req.batch)
+            else:
+                raise ValueError(f"unknown op {req.op!r}")
+            dt = time.perf_counter() - t0
+            if req.op != "update":      # update() already tracks its wall
+                self.queries_served += 1
+                self.query_wall_s += dt
+            out.append(Response(op=req.op, payload=payload, wall_s=dt))
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "n": self.engine.graph.n,
+            "m": self.engine.graph.m,
+            "max_k": self.max_k(),
+            "queries_served": self.queries_served,
+            "clients_answered": self.clients_answered,
+            "updates_applied": self.updates_applied,
+            "update_messages": self.update_messages,
+            "update_rounds": self.update_rounds,
+            "query_wall_s": round(self.query_wall_s, 4),
+            "update_wall_s": round(self.update_wall_s, 4),
+        }

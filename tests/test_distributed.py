@@ -16,9 +16,9 @@ import jax
 import numpy as np
 from repro.graph import generators as gen
 from repro.core import bz_core_numbers, kcore_decompose, kcore_decompose_sharded
+from repro.distribution.compat import make_mesh
 
-mesh = jax.make_mesh({mesh_shape}, {axes},
-                     axis_types=(jax.sharding.AxisType.Auto,) * {naxes})
+mesh = make_mesh({mesh_shape}, {axes})
 g = gen.barabasi_albert(400, 4, seed=2)
 res = kcore_decompose_sharded(g, mesh, {axes})
 ref = kcore_decompose(g)
@@ -42,7 +42,10 @@ def test_sharded_kcore_multidevice(ndev, mesh_shape, axes):
     proc = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, cwd="/root/repo", timeout=500)
+             "HOME": "/root",
+             # keep jax off accelerator probing (the TPU plugin's GCP
+             # metadata retries burn minutes in a hermetic env)
+             "JAX_PLATFORMS": "cpu"}, cwd="/root/repo", timeout=500)
     assert proc.returncode == 0, proc.stderr[-2000:]
     out = json.loads(proc.stdout.strip().splitlines()[-1])
     assert out["rounds"] > 0
@@ -58,9 +61,9 @@ from repro.configs import get_smoke
 from repro.models.transformer import steps as S, model as M
 from repro.configs.base import ShapeSpec
 from repro.optim import adamw_init
+from repro.distribution.compat import make_mesh
 cfg = dataclasses.replace(get_smoke("yi-34b"), n_layers=2)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("data", "model"))
 shape = ShapeSpec("t", "train", {"seq_len": 64, "global_batch": 4})
 step, specs, in_sh, out_sh = S.build_step(cfg, shape, mesh)
 params = M.init_params(cfg, jax.random.key(0))
@@ -79,7 +82,10 @@ print("OK", loss_sharded)
     proc = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, cwd="/root/repo", timeout=500)
+             "HOME": "/root",
+             # keep jax off accelerator probing (the TPU plugin's GCP
+             # metadata retries burn minutes in a hermetic env)
+             "JAX_PLATFORMS": "cpu"}, cwd="/root/repo", timeout=500)
     assert proc.returncode == 0, proc.stderr[-2000:]
 
 
@@ -91,11 +97,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint, restore_checkpoint
+from repro.distribution.compat import make_mesh
 d = tempfile.mkdtemp()
 state = {"w": jnp.arange(16.0).reshape(4, 4)}
 save_checkpoint(d, 5, state)
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 sh = {"w": NamedSharding(mesh, P("data", None))}
 restored, step = restore_checkpoint(d, state, shardings=sh)
 assert step == 5
@@ -107,5 +113,8 @@ print("OK")
     proc = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, cwd="/root/repo", timeout=300)
+             "HOME": "/root",
+             # keep jax off accelerator probing (the TPU plugin's GCP
+             # metadata retries burn minutes in a hermetic env)
+             "JAX_PLATFORMS": "cpu"}, cwd="/root/repo", timeout=300)
     assert proc.returncode == 0, proc.stderr[-2000:]

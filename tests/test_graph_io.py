@@ -1,0 +1,47 @@
+"""Graph IO: dataCleanse parsing rules and round-trips."""
+
+import numpy as np
+
+from repro.graph.io import (parse_edge_list, parse_json_adjacency,
+                            to_json_adjacency)
+from repro.graph.structs import Graph
+
+
+def test_json_adjacency_n_covers_neighbor_values():
+    """Regression: {"0": [5]} must build a 6-vertex graph, not a 1-vertex
+    graph with out-of-range neighbor ids."""
+    g = parse_json_adjacency('{"0": [5]}')
+    assert g.n == 6
+    assert g.m == 1
+    g.validate()
+    assert (g.dst < g.n).all()
+    assert list(g.neighbors(0)) == [5]
+    assert list(g.neighbors(5)) == [0]
+
+
+def test_json_adjacency_roundtrip():
+    g = Graph.from_edges([(0, 1), (1, 2), (2, 0), (2, 3)], n=5)
+    g2 = parse_json_adjacency(to_json_adjacency(g))
+    # isolated vertex 4 survives (its key counts toward n), as do all edges
+    assert g2.n == g.n
+    assert g2.m == g.m
+    assert (g2.src == g.src).all() and (g2.dst == g.dst).all()
+
+
+def test_json_adjacency_empty():
+    g = parse_json_adjacency("{}")
+    assert g.n == 0 and g.m == 0
+
+
+def test_json_adjacency_one_sided_lists():
+    """Neighbor lists need not be symmetric in the input; dataCleanse
+    symmetrizes and dedupes."""
+    g = parse_json_adjacency('{"0": [1, 1, 2], "1": [0], "3": []}')
+    assert g.n == 4
+    assert g.m == 2
+    assert g.deg[3] == 0
+
+
+def test_edge_list_comments_and_separators():
+    g = parse_edge_list("# header\n0 1\n1,2\n% alt comment\n2\t0\n")
+    assert g.n == 3 and g.m == 3

@@ -1,6 +1,10 @@
 """Hypothesis property tests for the k-core system invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see "
+                    "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import KCoreConfig, bz_core_numbers, kcore_decompose
