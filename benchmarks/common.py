@@ -13,7 +13,7 @@ from __future__ import annotations
 import os
 import time
 
-from repro.core import KCoreConfig, bz_core_numbers, kcore_decompose
+from repro.core import KCoreConfig, kcore_decompose
 from repro.graph import generators as gen
 
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.05"))

@@ -11,7 +11,7 @@ from __future__ import annotations
 import json
 import pathlib
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.configs.registry import shape_by_name
 
 DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / \

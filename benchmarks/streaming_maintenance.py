@@ -7,8 +7,19 @@ re-decomposition of the same post-batch graph. Every batch is verified
 against the BZ oracle — the ratio column is only meaningful because the
 incremental answer is exact.
 
+Beyond the message ratio the table tracks the PR-2 maintenance stack:
+
+  * ``patch_ms`` vs ``rebuild_ms`` — in-place CSR patching against the old
+    O(m log m) sorted-COO rebuild of the same batch;
+  * ``sharded_ok`` — a second engine running the identical batch stream in
+    the ``sharded`` (shard_map mesh) frontier mode must match the dense
+    engine's cores AND per-round message bill exactly;
+  * ``mode`` — the execution mode the dense-side engine chose.
+
 Acceptance target (ISSUE 1): at 1% churn on a 10k-vertex analogue the
 incremental engine spends < 25% of the from-scratch messages per batch.
+``benchmarks.streaming_gate`` turns the per-(graph, churn) mean ratios into
+a CI regression gate against a committed baseline.
 
 Environment knobs (for CI smoke):
   REPRO_STREAM_BENCH_N        target vertex count        (default 10000)
@@ -18,13 +29,15 @@ Environment knobs (for CI smoke):
 from __future__ import annotations
 
 import os
+import time
 
 import numpy as np
 
 from benchmarks.common import csv_row
 from repro.core import bz_core_numbers, kcore_decompose
 from repro.graph import generators as gen
-from repro.streaming import StreamingKCoreEngine, random_churn_batch
+from repro.streaming import (StreamingConfig, StreamingKCoreEngine,
+                             apply_batch, random_churn_batch)
 
 GRAPHS = ("EEN", "G31", "FC")
 CHURN_RATES = (0.002, 0.01, 0.02)
@@ -32,38 +45,97 @@ CHURN_RATES = (0.002, 0.01, 0.02)
 TARGET_N = int(os.environ.get("REPRO_STREAM_BENCH_N", "10000"))
 BATCHES = int(os.environ.get("REPRO_STREAM_BENCH_BATCHES", "5"))
 
+COLUMNS = ("graph", "n", "m", "churn", "batch", "inserted", "deleted",
+           "inc_messages", "scratch_messages", "ratio", "inc_rounds",
+           "scratch_rounds", "region", "mode", "patch_ms", "rebuild_ms",
+           "sharded_ok", "oracle_ok")
 
-def run() -> list[str]:
-    rows = [csv_row("graph", "n", "m", "churn", "batch", "inserted",
-                    "deleted", "inc_messages", "scratch_messages", "ratio",
-                    "inc_rounds", "scratch_rounds", "region", "oracle_ok")]
+
+def settings() -> dict:
+    return {"target_n": TARGET_N, "batches": BATCHES,
+            "graphs": list(GRAPHS), "churn_rates": list(CHURN_RATES)}
+
+
+def run_records() -> list[dict]:
+    """Structured per-batch records (the CSV in run() and the JSON artifact
+    in streaming_gate both render these)."""
+    records = []
     for abbrev in GRAPHS:
         entry = gen.SNAP_BY_ABBREV[abbrev]
         scale = TARGET_N / entry.n
         for churn in CHURN_RATES:
             g = gen.snap_analogue(abbrev, scale=scale, seed=0)
             eng = StreamingKCoreEngine(g)
+            sharded = StreamingKCoreEngine(
+                g, StreamingConfig(frontier="sharded"))
             rng = np.random.default_rng(1)
-            ratios = []
             for t in range(BATCHES):
-                b = max(2, int(churn * eng.graph.m))
-                batch = random_churn_batch(eng.graph, b // 2, b - b // 2,
+                g_before = eng.graph       # materialized pre-batch snapshot
+                b = max(2, int(churn * g_before.m))
+                batch = random_churn_batch(g_before, b // 2, b - b // 2,
                                            rng)
                 res = eng.apply_batch(batch)
+                # the old path: full sorted-COO rebuild of the same batch
+                t0 = time.perf_counter()
+                apply_batch(g_before, batch)
+                rebuild_s = time.perf_counter() - t0
+
+                res_sh = sharded.apply_batch(batch)
+                sharded_ok = bool(
+                    (res.core == res_sh.core).all()
+                    and (res.stats.messages_per_round
+                         == res_sh.stats.messages_per_round).all())
+                assert sharded_ok, (
+                    f"{abbrev} churn={churn} batch={t}: sharded engine "
+                    "diverged from the single-device engine")
+
                 scratch = kcore_decompose(eng.graph)
                 ok = bool((res.core == bz_core_numbers(eng.graph)).all())
                 assert ok, (f"{abbrev} churn={churn} batch={t}: incremental "
                             "cores diverged from the BZ oracle")
                 ratio = res.total_messages / max(
                     scratch.stats.total_messages, 1)
-                ratios.append(ratio)
-                rows.append(csv_row(
-                    abbrev, eng.graph.n, eng.graph.m, churn, t,
-                    res.delta.inserted.shape[0], res.delta.deleted.shape[0],
-                    res.total_messages, scratch.stats.total_messages,
-                    round(ratio, 4), res.rounds, scratch.rounds,
-                    res.region_size, ok))
-            rows.append(csv_row(
-                abbrev, eng.graph.n, eng.graph.m, churn, "mean", "", "",
-                "", "", round(float(np.mean(ratios)), 4), "", "", "", ""))
+                records.append({
+                    "graph": abbrev, "n": eng.graph.n, "m": eng.graph.m,
+                    "churn": churn, "batch": t,
+                    "inserted": int(res.delta.inserted.shape[0]),
+                    "deleted": int(res.delta.deleted.shape[0]),
+                    "inc_messages": int(res.total_messages),
+                    "scratch_messages": int(scratch.stats.total_messages),
+                    "ratio": round(ratio, 4),
+                    "inc_rounds": res.rounds,
+                    "scratch_rounds": scratch.rounds,
+                    "region": res.region_size,
+                    "mode": res.mode,
+                    "patch_ms": round(res.patch_s * 1e3, 3),
+                    "rebuild_ms": round(rebuild_s * 1e3, 3),
+                    "sharded_ok": sharded_ok, "oracle_ok": ok,
+                })
+    return records
+
+
+def summarize(records: list[dict]) -> dict:
+    """Mean ratio / patch / rebuild per (graph, churn) — the gated signal."""
+    out: dict = {}
+    for r in records:
+        out.setdefault(f"{r['graph']}/{r['churn']}", []).append(r)
+    return {key: {
+        "mean_ratio": round(float(np.mean([r["ratio"] for r in rs])), 4),
+        "mean_patch_ms": round(float(np.mean([r["patch_ms"] for r in rs])),
+                               3),
+        "mean_rebuild_ms": round(float(np.mean([r["rebuild_ms"]
+                                                for r in rs])), 3),
+    } for key, rs in out.items()}
+
+
+def run() -> list[str]:
+    records = run_records()
+    rows = [csv_row(*COLUMNS)]
+    rows.extend(csv_row(*(r[c] for c in COLUMNS)) for r in records)
+    for key, s in summarize(records).items():
+        graph, churn = key.split("/")
+        rows.append(csv_row(
+            graph, "", "", churn, "mean", "", "", "", "", s["mean_ratio"],
+            "", "", "", "", s["mean_patch_ms"], s["mean_rebuild_ms"],
+            "", ""))
     return rows

@@ -5,7 +5,6 @@ rollout step and a short next-state training loop.
     PYTHONPATH=src python examples/graphcast_weather.py
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

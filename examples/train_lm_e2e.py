@@ -12,7 +12,6 @@ configuration the deliverable describes is:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

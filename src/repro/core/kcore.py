@@ -312,20 +312,73 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig()
                        stats=stats)
 
 
-def _receivers_np(g: Graph, changed: np.ndarray) -> np.ndarray:
-    recv = np.zeros(g.n, bool)
+def _receivers_arrays(n: int, src: np.ndarray, dst: np.ndarray,
+                      live: np.ndarray | None, changed: np.ndarray
+                      ) -> np.ndarray:
+    """Vertices with a (live) arc to a changed vertex — the next frontier.
+
+    ``live`` is an optional arc mask (the streaming engine's slack-padded
+    CSR has dead slots); None means every arc is real.
+    """
+    recv = np.zeros(n, bool)
     if changed.any():
-        arcs = changed[g.dst]
-        np.logical_or.at(recv, g.src[arcs], True)
+        sel = changed[dst] if live is None else live & changed[dst]
+        np.logical_or.at(recv, src[sel], True)
     return recv
+
+
+def _receivers_np(g: Graph, changed: np.ndarray) -> np.ndarray:
+    return _receivers_arrays(g.n, g.src, g.dst, None, changed)
 
 
 # ---------------------------------------------------------------------- #
 # Sharded superstep (shard_map) — the multi-pod path
 # ---------------------------------------------------------------------- #
 
+@functools.lru_cache(maxsize=128)
+def _masked_sharded_superstep(mesh: jax.sharding.Mesh,
+                              axes: tuple, V: int, n_iters: int):
+    """Cached jitted frontier-masked sharded superstep (streaming path).
+
+    Keyed on (mesh, axes, verts_per_shard, n_iters) so a churn stream whose
+    shard shapes are stable (the engine pads them to powers of two) reuses
+    one compiled program across batches. Same layout contract as
+    ``make_sharded_superstep``; on top of the est all_gather a second 1-bit
+    all_gather of the changed mask computes next round's receivers locally.
+
+    Returns ``superstep(est, src, dst, arc_mask, deg, active) ->
+    (est', changed, recv, msgs)`` with est'/changed/recv sharded like the
+    state and msgs a replicated scalar.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution.compat import shard_map
+
+    def superstep(est, src, dst, arc_mask, deg, active):
+        est_l, act_l = est[0], active[0]
+        est_glob = lax.all_gather(est, axes, axis=0, tiled=True).reshape(-1)
+        est_dst = jnp.where(arc_mask[0], est_glob[dst[0]], 0)
+        h = _hindex_by_bsearch(est_l, est_dst, src[0], V, n_iters)
+        new_l = jnp.where(act_l, h, est_l)
+        changed_l = new_l < est_l
+        msgs = lax.psum(jnp.sum(jnp.where(changed_l, deg[0], 0)), axes)
+        ch_glob = lax.all_gather(changed_l[None], axes, axis=0,
+                                 tiled=True).reshape(-1)
+        recv_l = jax.ops.segment_sum(
+            jnp.where(arc_mask[0], ch_glob[dst[0]], False).astype(jnp.int32),
+            src[0], num_segments=V) > 0
+        return new_l[None], changed_l[None], recv_l[None], msgs
+
+    spec_state = P(axes)
+    sharded = shard_map(superstep, mesh=mesh,
+                        in_specs=(spec_state,) * 6,
+                        out_specs=(spec_state, spec_state, spec_state, P()))
+    return jax.jit(sharded)
+
+
 def make_sharded_superstep(sg: ShardedGraph, mesh: jax.sharding.Mesh,
-                           axis_names: Sequence[str], n_iters: int):
+                           axis_names: Sequence[str], n_iters: int,
+                           masked: bool = False):
     """Build a jit-able superstep over a device mesh.
 
     State layout: est (n_shards, V) with the leading dim sharded over the
@@ -336,12 +389,23 @@ def make_sharded_superstep(sg: ShardedGraph, mesh: jax.sharding.Mesh,
       4. psum of (messages, changed-any)    — the paper's heartbeat/termination.
 
     Returns ``superstep(est, src, dst, arc_mask, deg) -> (est', msgs, any)``
-    plus the in/out shardings for jit.
+    plus the in/out shardings for jit. With ``masked=True`` the superstep
+    additionally takes an ``active`` (n_shards, V) bool mask — only active
+    vertices recompute — and returns ``(est', changed, recv, msgs)`` (see
+    ``_masked_sharded_superstep``); this is the primitive the streaming
+    engine iterates on a mesh.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     axes = tuple(axis_names)
     V = sg.verts_per_shard
+
+    if masked:
+        shardings = {
+            "state": NamedSharding(mesh, P(axes)),
+            "scalar": NamedSharding(mesh, P()),
+        }
+        return _masked_sharded_superstep(mesh, axes, V, n_iters), shardings
 
     def superstep(est, src, dst, arc_mask, deg):
         # shapes inside shard_map (per device): est (1, V), src (1, A), ...

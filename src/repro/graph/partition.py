@@ -44,39 +44,64 @@ class ShardedGraph:
         return self.n_shards * self.verts_per_shard
 
 
-def shard_graph(g: Graph, n_shards: int, arc_multiple: int = 8) -> ShardedGraph:
-    V = max(_round_up(g.n, n_shards) // n_shards, 1)
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def shard_arc_arrays(n: int, src: np.ndarray, dst: np.ndarray,
+                     arc_mask: np.ndarray, deg: np.ndarray, n_shards: int,
+                     arc_multiple: int = 8, pow2: bool = False
+                     ) -> ShardedGraph:
+    """Shard raw src-sorted arc arrays (the layout contract above).
+
+    ``src`` must be non-decreasing but MAY contain dead slots (``arc_mask``
+    False) — the streaming engine's slack-padded CSR storage shards without
+    re-sorting because its row-major slot order is already src order. With
+    ``pow2`` the per-shard vertex and arc blocks are padded to powers of two
+    so jit sees O(log) distinct shapes over a whole update stream.
+    """
+    V = max(_round_up(n, n_shards) // n_shards, 1)
+    if pow2:
+        V = _next_pow2(V)
     n_pad = V * n_shards
     # Arc run per shard.
-    bounds = np.searchsorted(g.src, np.arange(0, n_pad + 1, V))
+    bounds = np.searchsorted(src, np.arange(0, n_pad + 1, V))
     run_len = np.diff(bounds)
     A = max(_round_up(int(run_len.max()) if len(run_len) else 1, arc_multiple),
             arc_multiple)
-    src = np.zeros((n_shards, A), np.int32)
-    dst = np.zeros((n_shards, A), np.int32)
-    mask = np.zeros((n_shards, A), bool)
-    deg = np.zeros((n_shards, V), np.int32)
+    if pow2:
+        A = _next_pow2(A)
+    src_s = np.zeros((n_shards, A), np.int32)
+    dst_s = np.zeros((n_shards, A), np.int32)
+    mask_s = np.zeros((n_shards, A), bool)
+    deg_s = np.zeros((n_shards, V), np.int32)
     vmask = np.zeros((n_shards, V), bool)
     for d in range(n_shards):
         lo, hi = bounds[d], bounds[d + 1]
         k = hi - lo
         # local src index within the shard's vertex range
-        src[d, :k] = g.src[lo:hi] - d * V
-        dst[d, :k] = g.dst[lo:hi]
-        mask[d, :k] = True
+        src_s[d, :k] = src[lo:hi] - d * V
+        dst_s[d, :k] = dst[lo:hi]
+        mask_s[d, :k] = arc_mask[lo:hi]
         # padding arcs: local sentinel = V-1's padding slot if it exists,
         # else point at local vertex 0 with mask False (engine multiplies by
         # mask before any segment op, so value never matters).
-        src[d, k:] = V - 1
-        dst[d, k:] = min(d * V + V - 1, n_pad - 1)
-        vr_lo, vr_hi = d * V, min((d + 1) * V, g.n)
+        src_s[d, k:] = V - 1
+        dst_s[d, k:] = min(d * V + V - 1, n_pad - 1)
+        vr_lo, vr_hi = d * V, min((d + 1) * V, n)
         if vr_hi > vr_lo:
-            deg[d, : vr_hi - vr_lo] = g.deg[vr_lo:vr_hi]
+            deg_s[d, : vr_hi - vr_lo] = deg[vr_lo:vr_hi]
             vmask[d, : vr_hi - vr_lo] = True
     return ShardedGraph(
-        n_shards=n_shards, n_real=g.n, verts_per_shard=V, arcs_per_shard=A,
-        src=src, dst=dst, arc_mask=mask, deg=deg, vert_mask=vmask,
+        n_shards=n_shards, n_real=n, verts_per_shard=V, arcs_per_shard=A,
+        src=src_s, dst=dst_s, arc_mask=mask_s, deg=deg_s, vert_mask=vmask,
     )
+
+
+def shard_graph(g: Graph, n_shards: int, arc_multiple: int = 8) -> ShardedGraph:
+    return shard_arc_arrays(g.n, g.src, g.dst,
+                            np.ones(g.num_arcs, bool), g.deg, n_shards,
+                            arc_multiple=arc_multiple)
 
 
 def balance_report(sg: ShardedGraph) -> dict:

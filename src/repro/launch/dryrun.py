@@ -181,7 +181,6 @@ def _save(rec: dict) -> None:
 # ---------------------------------------------------------------------- #
 
 def run_kcore_cell(graph_abbrev: str, mesh_name: str, save=True) -> dict:
-    import numpy as np
     from repro.core.kcore import _bs_iters, make_sharded_superstep
     from repro.graph.generators import SNAP_BY_ABBREV
     from repro.graph.partition import ShardedGraph

@@ -17,8 +17,6 @@ import time
 import jax
 
 from repro.configs import get_config
-from repro.configs.base import MoEConfig
-from repro.configs.registry import shape_by_name
 from repro.launch import hlo_analysis, jaxpr_cost
 from repro.launch.dryrun import _mem_dict, build_cell
 from repro.launch.mesh import make_production_mesh, n_devices

@@ -15,7 +15,6 @@ import argparse
 import json
 import time
 
-import numpy as np
 
 from repro.core import (KCoreConfig, bz_core_numbers, kcore_decompose,
                         work_bound)

@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m repro.launch.kcore_serve --graph EEN --scale 0.27
     PYTHONPATH=src python -m repro.launch.kcore_serve --graph FC \
         --batches 10 --churn 0.01 --queries 100000 --verify
+    PYTHONPATH=src python -m repro.launch.kcore_serve --graph ba --mesh 4 \
+        --frontier sharded --verify
 
 Each tick applies one churn batch (--churn fraction of current edges, split
 between deletes and inserts) through the incremental engine, then answers a
@@ -12,33 +14,24 @@ index instead of a per-request decomposition. Prints one CSV row per tick:
 incremental vs from-scratch message bill, re-convergence rounds, region size,
 and query throughput. --verify additionally checks every tick against the BZ
 oracle (slow; for demos and CI smoke).
+
+--mesh N runs the maintenance engine mesh-native on an N-device ("data",)
+mesh: the initial decomposition and the per-batch masked supersteps execute
+as shard_map programs. If fewer than N real devices exist, N host (CPU)
+devices are forced via XLA_FLAGS — which only works because this module
+defers every jax import until after the flag is set, so keep --mesh runs to
+fresh processes. Cores and message counts are identical to the
+single-device engine on any mesh (that equality is CI-tested).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import numpy as np
 
-from repro.core import bz_core_numbers, kcore_decompose
-from repro.graph import generators
-from repro.streaming import (KCoreServer, Request, StreamingConfig,
-                             random_churn_batch)
-
-
-def build_graph(args):
-    if args.graph == "chain":
-        return generators.chain(args.n)
-    if args.graph == "ba":
-        return generators.barabasi_albert(args.n, 4, seed=args.seed)
-    if args.graph == "er":
-        return generators.erdos_renyi(args.n, 4 * args.n, seed=args.seed)
-    return generators.snap_analogue(args.graph, scale=args.scale,
-                                    seed=args.seed)
-
-
-def main() -> None:
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="EEN",
                     help="SNAP abbrev (Table I) or chain/ba/er")
@@ -51,21 +44,64 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=100_000,
                     help="core-number lookups per tick")
     ap.add_argument("--frontier", default="dense",
-                    choices=["dense", "compact"])
+                    choices=["dense", "compact", "sharded", "auto"])
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="run mesh-native on an N-device ('data',) mesh; "
+                         "forces N host devices when fewer exist (must be "
+                         "set before jax initializes — fresh process only). "
+                         "0 = single device (default)")
     ap.add_argument("--verify", action="store_true",
                     help="check vs the BZ oracle every tick (slow)")
-    args = ap.parse_args()
+    return ap.parse_args()
 
-    g = build_graph(args)
+
+def build_graph(args, generators):
+    if args.graph == "chain":
+        return generators.chain(args.n)
+    if args.graph == "ba":
+        return generators.barabasi_albert(args.n, 4, seed=args.seed)
+    if args.graph == "er":
+        return generators.erdos_renyi(args.n, 4 * args.n, seed=args.seed)
+    return generators.snap_analogue(args.graph, scale=args.scale,
+                                    seed=args.seed)
+
+
+def main() -> None:
+    args = parse_args()
+    if args.mesh:
+        # must precede the first jax import anywhere in the process
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={args.mesh}"
+        ).strip()
+
+    import numpy as np
+
+    from repro.core import bz_core_numbers, kcore_decompose
+    from repro.graph import generators
+    from repro.streaming import (KCoreServer, Request, StreamingConfig,
+                                 random_churn_batch)
+
+    mesh = None
+    if args.mesh:
+        from repro.distribution.compat import make_mesh
+        mesh = make_mesh((args.mesh,), ("data",))
+        if args.frontier == "dense":
+            args.frontier = "sharded"
+
+    g = build_graph(args, generators)
     t0 = time.perf_counter()
-    server = KCoreServer(g, StreamingConfig(frontier=args.frontier))
-    print(f"# graph={args.graph} n={g.n} m={g.m} "
+    server = KCoreServer(g, StreamingConfig(frontier=args.frontier),
+                         mesh=mesh)
+    print(f"# graph={args.graph} n={g.n} m={g.m} mesh={args.mesh or 1} "
+          f"frontier={args.frontier} "
           f"init_messages={server.engine.init_result.stats.total_messages} "
           f"init_wall_s={time.perf_counter() - t0:.2f}")
     rng = np.random.default_rng(args.seed)
 
     cols = ("tick,m,inserted,deleted,inc_messages,scratch_messages,ratio,"
-            "rounds,region,seed_changed,queries,query_s,max_k,verified")
+            "rounds,region,seed_changed,mode,patch_s,queries,query_s,max_k,"
+            "verified")
     print(cols)
     for tick in range(args.batches):
         b = max(2, int(args.churn * server.engine.graph.m))
@@ -96,7 +132,8 @@ def main() -> None:
             tick, server.engine.graph.m, res.delta.inserted.shape[0],
             res.delta.deleted.shape[0], res.total_messages,
             scratch.stats.total_messages, round(ratio, 4), res.rounds,
-            res.region_size, res.seed_changed, args.queries,
+            res.region_size, res.seed_changed, res.mode,
+            round(res.patch_s, 5), args.queries,
             round(query_s, 4), server.max_k(), verified)))
 
     print(f"# final_stats={server.stats()}")

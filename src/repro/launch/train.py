@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.data import synth_lm_batch

@@ -17,8 +17,6 @@ citation-shaped cells these are synthesized inputs (DESIGN.md §6).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp

@@ -18,12 +18,11 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import GNNConfig, ShapeSpec
 from repro.models.gnn import egnn, graphcast, mace, schnet
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import AdamWConfig, adamw_update
 
 _MODELS = {"mace": mace, "schnet": schnet, "egnn": egnn,
            "graphcast": graphcast}

@@ -10,7 +10,6 @@ path; tables are row-sharded over "model" (see steps.py)."""
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import RecSysConfig, ShapeSpec
 from repro.models.recsys import din
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import AdamWConfig, adamw_update
 
 
 def param_specs(cfg: RecSysConfig) -> dict:

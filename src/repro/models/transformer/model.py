@@ -20,13 +20,11 @@ Design notes
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.models.util import scan_unroll

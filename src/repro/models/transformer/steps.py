@@ -6,7 +6,6 @@ out_shardings) so launch/dryrun.py and launch/train.py share one code path.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

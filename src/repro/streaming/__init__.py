@@ -13,7 +13,8 @@ This package layers dynamic-graph maintenance on top of it:
     membership / max-k queries (the paper's million-client scenario).
 """
 
-from repro.streaming.delta import (DeltaResult, EdgeBatch, apply_batch,
+from repro.streaming.delta import (ChurnDelta, DeltaResult, EdgeBatch,
+                                   PatchableCSR, apply_batch,
                                    canonical_edges, random_churn_batch)
 from repro.streaming.engine import (BatchResult, StreamingConfig,
                                     StreamingKCoreEngine, warm_start_seed)
@@ -21,7 +22,9 @@ from repro.streaming.server import KCoreServer, Request, Response
 
 __all__ = [
     "EdgeBatch",
+    "ChurnDelta",
     "DeltaResult",
+    "PatchableCSR",
     "apply_batch",
     "canonical_edges",
     "random_churn_batch",

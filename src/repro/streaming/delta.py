@@ -1,8 +1,19 @@
 """Mutable graph delta layer: batched edge insert/delete on the COO/CSR Graph.
 
-The static Graph is immutable (frozen dataclass); a churn batch produces a
-*new* Graph plus a precise report of what actually changed. The same
-dataCleanse rules as Graph.from_edges apply to the batch itself:
+Two ways to apply a churn batch, with identical dataCleanse semantics:
+
+  * ``apply_batch`` — rebuild: produces a *new* immutable Graph by one
+    O(m log m) lexsort over the surviving edge set. Simple, and the
+    reference the patch path is property-tested against.
+  * ``PatchableCSR`` — in-place: slack-padded CSR storage where each row
+    carries spare slots, so a batch patches arc slots in O(batch * deg)
+    instead of touching all m edges. Rows that overflow their slack, vertex
+    growth, or a dead-slot fraction past ``compact_dead_frac`` trigger an
+    O(m) compaction (amortized away over a stream). The padded slot arrays
+    double as the engine's masked-superstep inputs — dead slots are just
+    masked arcs, so no densification happens between batches.
+
+The dataCleanse rules applied to the batch itself (same as Graph.from_edges):
 
   * self-loops in the batch are dropped;
   * edges are undirected — (u, v) and (v, u) are the same edge, canonical
@@ -12,11 +23,6 @@ dataCleanse rules as Graph.from_edges apply to the batch itself:
 
 Deletes are applied before inserts, so a batch that deletes and inserts the
 same edge nets out to "edge present".
-
-Rebuild cost is O(m log m) per batch (one lexsort over the surviving edge
-set) — at the scales this repo benchmarks the host-side rebuild is noise
-next to the message bill the engine is measuring; a fully in-place CSR
-patch is an open item in ROADMAP.md.
 """
 
 from __future__ import annotations
@@ -122,6 +128,204 @@ def apply_batch(g: Graph, batch: EdgeBatch) -> DeltaResult:
                                         deleted.reshape(-1)]))
     return DeltaResult(graph=new_g, inserted=inserted, deleted=deleted,
                        touched=touched.astype(np.int64))
+
+
+# ---------------------------------------------------------------------- #
+# In-place CSR patching
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ChurnDelta:
+    """What a patched batch actually changed (no materialized Graph)."""
+
+    inserted: np.ndarray      # (bi, 2) canonical edges actually added
+    deleted: np.ndarray       # (bd, 2) canonical edges actually removed
+    touched: np.ndarray       # sorted unique vertex ids incident to a change
+    compacted: bool           # did this batch trigger an O(m) compaction?
+
+
+class PatchableCSR:
+    """Slack-padded CSR adjacency supporting in-place edge churn.
+
+    Storage: every vertex u owns a contiguous slot range
+    ``[row_off[u], row_off[u+1])`` in flat ``src``/``dst`` arrays;
+    ``live`` marks which slots currently hold an arc. ``src`` is constant
+    per row (the owner), so the slot arrays are src-sorted by construction
+    — exactly the sorted-COO-with-mask layout the masked superstep and the
+    sharded partitioner consume, without any per-batch sort.
+
+    Capacity per row is ``deg + max(ceil(slack * deg), min_slack)`` at
+    (re)build time. An insert lands in a free slot of each endpoint's row;
+    a delete just clears ``live``. Compaction (rebuild with fresh slack)
+    triggers on row overflow, vertex growth, or when the dead-slot fraction
+    of the total capacity exceeds ``compact_dead_frac``.
+    """
+
+    def __init__(self, g: Graph, slack: float = 0.3, min_slack: int = 4,
+                 compact_dead_frac: float = 0.25):
+        self.slack = float(slack)
+        # >= 1 so a compaction always frees at least one slot per row (the
+        # overflow-retry in apply_batch relies on it)
+        self.min_slack = max(int(min_slack), 1)
+        self.compact_dead_frac = float(compact_dead_frac)
+        self.compactions = 0
+        self._alloc(g.n, g.src, g.dst, g.deg)
+
+    # ------------------------------------------------------------------ #
+    def _alloc(self, n: int, src: np.ndarray, dst: np.ndarray,
+               deg: np.ndarray) -> None:
+        """(Re)build storage from src-sorted live arcs with fresh slack."""
+        deg = np.asarray(deg, np.int64)
+        pad = np.maximum(np.ceil(self.slack * deg).astype(np.int64),
+                         self.min_slack)
+        cap = deg + pad
+        self.n = int(n)
+        self.row_off = np.zeros(n + 1, np.int64)
+        np.cumsum(cap, out=self.row_off[1:])
+        C = int(self.row_off[-1])
+        self.src = np.repeat(np.arange(n, dtype=np.int32),
+                             cap).astype(np.int32, copy=False)
+        self.dst = self.src.copy()      # dead slots point at their owner
+        self.live = np.zeros(C, bool)
+        # scatter the existing arcs to the head of each row
+        if src.size:
+            arc_slot = (self.row_off[src]
+                        + (np.arange(src.size) - np.cumsum(deg)[src]
+                           + deg[src])).astype(np.int64)
+            self.dst[arc_slot] = dst
+            self.live[arc_slot] = True
+        self.deg = deg.astype(np.int32).copy()
+        self.m = int(deg.sum()) // 2
+        # holes = slots that were live and got deleted (NOT virgin slack):
+        # the fragmentation measure driving compact_dead_frac
+        self.hole = np.zeros(C, bool)
+        self.dead = 0
+
+    @property
+    def capacity(self) -> int:
+        return int(self.row_off[-1])
+
+    # ------------------------------------------------------------------ #
+    def _row(self, u: int) -> slice:
+        return slice(int(self.row_off[u]), int(self.row_off[u + 1]))
+
+    def _find_slot(self, u: int, v: int) -> int:
+        """Slot index of live arc u->v, or -1."""
+        r = self._row(u)
+        hit = np.flatnonzero(self.live[r] & (self.dst[r] == v))
+        return int(r.start + hit[0]) if hit.size else -1
+
+    def _free_slot(self, u: int) -> int:
+        """A dead slot in u's row, or -1 if the row is full."""
+        r = self._row(u)
+        free = np.flatnonzero(~self.live[r])
+        return int(r.start + free[0]) if free.size else -1
+
+    def has_edge(self, u: int, v: int) -> bool:
+        return self._find_slot(u, v) >= 0
+
+    # ------------------------------------------------------------------ #
+    def _compact(self, n: int | None = None) -> None:
+        """Rebuild with fresh slack (and optionally a grown vertex set)."""
+        n = self.n if n is None else int(n)
+        keep = self.live
+        src = self.src[keep].astype(np.int64)
+        dst = self.dst[keep].astype(np.int64)
+        # rows stay contiguous under filtering, so src stays sorted
+        deg = np.bincount(src, minlength=n)
+        self._alloc(n, src.astype(np.int32), dst.astype(np.int32), deg)
+        self.compactions += 1
+
+    # ------------------------------------------------------------------ #
+    def apply_batch(self, batch: EdgeBatch) -> ChurnDelta:
+        """Patch a churn batch in place; returns the effective delta.
+
+        Semantics are identical to the rebuild path ``apply_batch(g, b)``:
+        deletes first, then inserts; no-ops dropped; vertex ids beyond n in
+        the inserts grow the vertex set.
+        """
+        ins = _canonicalize(batch.insert)
+        dele = _canonicalize(batch.delete)
+        if (ins.size and ins.min() < 0) or (dele.size and dele.min() < 0):
+            raise ValueError("negative vertex id in churn batch")
+        compacted = False
+        new_n = max(self.n, int(ins.max()) + 1 if ins.size else 0)
+        if new_n > self.n:
+            self._compact(new_n)
+            compacted = True
+
+        deleted = []
+        for u, v in dele.tolist():
+            if v >= self.n:             # unknown vertex: no-op
+                continue
+            s_uv = self._find_slot(u, v)
+            if s_uv < 0:
+                continue
+            s_vu = self._find_slot(v, u)
+            self.live[s_uv] = False
+            self.live[s_vu] = False
+            self.hole[s_uv] = True
+            self.hole[s_vu] = True
+            self.deg[u] -= 1
+            self.deg[v] -= 1
+            self.m -= 1
+            self.dead += 2
+            deleted.append((u, v))
+
+        inserted = []
+        for u, v in ins.tolist():
+            if self.has_edge(u, v):     # already present: no-op
+                continue
+            s_uv = self._free_slot(u)
+            s_vu = self._free_slot(v)
+            if s_uv < 0 or s_vu < 0:    # row overflow: compact, then retry
+                self._compact()
+                compacted = True
+                s_uv = self._free_slot(u)
+                s_vu = self._free_slot(v)
+            self.dst[s_uv] = v
+            self.dst[s_vu] = u
+            self.live[s_uv] = True
+            self.live[s_vu] = True
+            for s in (s_uv, s_vu):
+                if self.hole[s]:        # refilled a real hole, not slack
+                    self.hole[s] = False
+                    self.dead -= 1
+            self.deg[u] += 1
+            self.deg[v] += 1
+            self.m += 1
+            inserted.append((u, v))
+
+        if self.dead > self.compact_dead_frac * max(self.capacity, 1):
+            self._compact()
+            compacted = True
+
+        def arr(pairs):
+            return (np.asarray(pairs, np.int64).reshape(-1, 2) if pairs
+                    else np.zeros((0, 2), np.int64))
+
+        ins_a, del_a = arr(inserted), arr(deleted)
+        touched = np.unique(np.concatenate([ins_a.reshape(-1),
+                                            del_a.reshape(-1)]))
+        return ChurnDelta(inserted=ins_a, deleted=del_a,
+                          touched=touched.astype(np.int64),
+                          compacted=compacted)
+
+    # ------------------------------------------------------------------ #
+    def to_graph(self) -> Graph:
+        """Materialize the exact immutable Graph (sorted COO) — O(m log m).
+
+        Verification/interop only; the engine's hot path consumes the slot
+        arrays directly.
+        """
+        src = self.src[self.live]
+        dst = self.dst[self.live]
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
+        offsets = np.zeros(self.n + 1, np.int64)
+        np.cumsum(self.deg, out=offsets[1:])
+        return Graph(n=self.n, m=self.m, src=src, dst=dst,
+                     offsets=offsets, deg=self.deg.copy())
 
 
 def random_churn_batch(g: Graph, n_insert: int, n_delete: int,

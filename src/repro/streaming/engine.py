@@ -15,7 +15,14 @@ Seeding rules (all sound, proofs in the docstrings below):
     from a tight upper-bound vector computed by a batch generalization of
     the single-edge subcore theorem: +1 passes over level-set components
     anchored at inserted edges, pruned by a support peel
-    (see ``_insertion_upper_bound``).
+    (see ``_insertion_upper_bound``). The passes run as vectorized jax
+    segment ops (bottleneck-path propagation + synchronous peel), so seed
+    cost no longer scales with host-side Python.
+
+The graph itself lives in a slack-padded in-place CSR (streaming/delta.py
+``PatchableCSR``): a batch patches arc slots instead of rebuilding the
+sorted COO, and the slot arrays feed the supersteps directly (dead slots
+are masked arcs).
 
 Message accounting mirrors core/messages.py: round 0 of a batch charges
 deg(u) for every vertex whose seed differs from its previously broadcast
@@ -24,33 +31,45 @@ link handshake/teardown); every later round charges deg(u) per vertex whose
 estimate decreased. This makes "messages per batch" directly comparable to
 the from-scratch total the paper reports.
 
-Two frontier execution modes:
+Three frontier execution modes (plus ``auto``, which picks per batch):
 
   * ``dense``   — full-width jitted masked superstep (core.masked_round_segment):
     one XLA program for the whole stream, frontier as a boolean mask;
   * ``compact`` — per-round extraction of the active subgraph, padded to
     powers of two so jit recompiles only O(log n) distinct shapes; work per
-    round is proportional to the frontier, not the graph.
+    round is proportional to the frontier, not the graph;
+  * ``sharded`` — the masked superstep runs as a shard_map over a device
+    mesh (core.make_sharded_superstep(..., masked=True)): vertex state
+    sharded by contiguous range, one est all_gather plus one 1-bit changed
+    all_gather per round. The in-place CSR's slot arrays are already
+    src-sorted, so sharding a churned graph needs no sort.
 
-Both modes produce identical estimates and identical message counts.
+All modes produce identical estimates and identical message counts.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core.kcore import (KCoreConfig, _bs_iters, _hindex_by_bsearch,
-                              _receivers_np, kcore_decompose,
-                              masked_round_segment)
+                              _receivers_arrays, kcore_decompose,
+                              kcore_decompose_sharded,
+                              make_sharded_superstep, masked_round_segment)
 from repro.core.messages import MessageStats
+from repro.graph.partition import _next_pow2
 from repro.graph.structs import Graph
-from repro.streaming.delta import DeltaResult, EdgeBatch, apply_batch
+from repro.streaming.delta import ChurnDelta, DeltaResult, EdgeBatch, \
+    PatchableCSR
+
+FRONTIER_MODES = ("dense", "compact", "sharded", "auto")
 
 
 # ---------------------------------------------------------------------- #
@@ -59,8 +78,15 @@ from repro.streaming.delta import DeltaResult, EdgeBatch, apply_batch
 
 @dataclasses.dataclass(frozen=True)
 class StreamingConfig:
-    frontier: str = "dense"          # "dense" | "compact"
+    frontier: str = "dense"          # one of FRONTIER_MODES
     max_rounds: int | None = None    # None -> n + 1 per batch (worst case)
+    # "auto" picks compact below this initial-frontier fraction, else
+    # sharded when a mesh is attached, else dense
+    compact_threshold: float = 0.02
+    # in-place CSR knobs (see delta.PatchableCSR)
+    slack: float = 0.3
+    min_slack: int = 4
+    compact_dead_frac: float = 0.25
 
 
 @dataclasses.dataclass
@@ -71,9 +97,12 @@ class BatchResult:
     rounds: int               # supersteps to re-converge (excl. seed round)
     converged: bool
     stats: MessageStats       # per-round accounting; [0] = seed broadcast
-    delta: DeltaResult        # what the batch actually changed
+    delta: ChurnDelta         # what the batch actually changed
     region_size: int          # |R| — insertion region that was re-seeded up
     seed_changed: int         # vertices that had to rebroadcast at seed time
+    mode: str = "dense"       # execution mode this batch actually ran in
+    patch_s: float = 0.0      # host seconds spent patching the CSR in place
+    # (whether the batch forced an O(m) CSR compaction: delta.compacted)
 
     @property
     def total_messages(self) -> int:
@@ -83,6 +112,85 @@ class BatchResult:
 # ---------------------------------------------------------------------- #
 # Warm-start seeding
 # ---------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _ub_pass(U, cap, src, dst, live, ins_u, ins_v, ins_live, n):
+    """One vectorized +1 pass of the insertion upper bound (see below).
+
+    All device-side segment ops; dead/padding arc slots carry live=False.
+    Returns (U', raised_any).
+
+      1. bottleneck propagation: T(x) = max over paths from x to an
+         inserted-edge endpoint of min(k_e, min U over the path) — the
+         fixpoint of T(x) = max(A(x), max_{y~x} min(U(y), T(y))) where A is
+         the best incident inserted-edge level. T(x) >= U(x) iff x's
+         component in the level set G_{>=U(x)} contains a qualifying
+         insertion (the union-find condition, as a max-min path problem);
+      2. candidates: T(x) >= U(x) and deg(x) > U(x);
+      3. synchronous support peel to the greatest fixpoint: survivors keep
+         > U(x) neighbors that are themselves survivors at the same level
+         or sit strictly above it. (Peeling order never changes the
+         greatest fixpoint, so the parallel peel equals the sequential
+         stack peel of the reference implementation.)
+    """
+    k_ins = jnp.where(ins_live, jnp.minimum(U[ins_u], U[ins_v]),
+                      jnp.int32(-1))
+    A = jnp.full(n, -1, jnp.int32).at[ins_u].max(k_ins).at[ins_v].max(k_ins)
+
+    def prop_body(state):
+        T, _ = state
+        val = jnp.where(live, jnp.minimum(U[dst], T[dst]), jnp.int32(-1))
+        T2 = jnp.maximum(T, jax.ops.segment_max(val, src, num_segments=n))
+        return T2, (T2 > T).any()
+
+    T, _ = lax.while_loop(lambda s: s[1], prop_body, (A, jnp.bool_(True)))
+
+    cand0 = (T >= U) & (cap > U)
+
+    def peel_body(state):
+        c, _ = state
+        qual = live & ((U[dst] > U[src]) | (c[dst] & (U[dst] == U[src])))
+        s = jax.ops.segment_sum(qual.astype(jnp.int32), src, num_segments=n)
+        c2 = c & (s > U)
+        return c2, (c2 != c).any()
+
+    cand, _ = lax.while_loop(lambda s: s[1], peel_body,
+                             (cand0, jnp.bool_(True)))
+    return jnp.where(cand, U + 1, U), cand.any()
+
+
+def _insertion_upper_bound_arrays(n: int, src, dst, live, deg,
+                                  old_core_ext: np.ndarray,
+                                  inserted: np.ndarray) -> np.ndarray:
+    """Vectorized insertion upper bound over raw (masked) arc arrays.
+
+    ``src``/``dst``/``live`` may be numpy or already-device arrays (the
+    engine passes its padded CSR slot arrays); shapes should be stable
+    across batches (pow2-padded) so the jitted pass compiles O(log) times.
+    """
+    U = old_core_ext.astype(np.int64).copy()
+    if inserted.size == 0 or n == 0:
+        return U
+    ins_pad = _next_pow2(max(inserted.shape[0], 1))
+    ins_u = np.zeros(ins_pad, np.int32)
+    ins_v = np.zeros(ins_pad, np.int32)
+    ins_live = np.zeros(ins_pad, bool)
+    ins_u[: inserted.shape[0]] = inserted[:, 0]
+    ins_v[: inserted.shape[0]] = inserted[:, 1]
+    ins_live[: inserted.shape[0]] = True
+
+    U_j = jnp.asarray(U, jnp.int32)
+    cap_j = jnp.asarray(deg, jnp.int32)
+    src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
+    live_j = jnp.asarray(live)
+    iu, iv, il = jnp.asarray(ins_u), jnp.asarray(ins_v), jnp.asarray(ins_live)
+    while True:
+        U_j, raised = _ub_pass(U_j, cap_j, src_j, dst_j, live_j,
+                               iu, iv, il, n)
+        if not bool(raised):
+            break
+    return np.asarray(U_j).astype(np.int64)
+
 
 def _insertion_upper_bound(new_g: Graph, old_core_ext: np.ndarray,
                            inserted: np.ndarray) -> np.ndarray:
@@ -121,9 +229,25 @@ def _insertion_upper_bound(new_g: Graph, old_core_ext: np.ndarray,
     of every intermediate one, which only enlarges components (safe: over-
     approximating raises costs extra seed broadcasts, never correctness).
 
-    Complexity per pass: one arc sort + union-find sweep over levels,
-    O(m alpha) plus the peel, all host-side numpy; the number of passes is
-    bounded by the largest true core increase (1-2 for realistic churn).
+    Each pass is one jitted ``_ub_pass`` (a max-min bottleneck propagation
+    replaces the host-side union-find sweep; a synchronous segment-sum peel
+    replaces the stack peel — both reach the same fixpoints, checked
+    against ``_insertion_upper_bound_unionfind`` in the tests). The number
+    of passes is bounded by the largest true core increase (1-2 for
+    realistic churn).
+    """
+    return _insertion_upper_bound_arrays(
+        new_g.n, new_g.src, new_g.dst, np.ones(new_g.num_arcs, bool),
+        new_g.deg, old_core_ext, inserted)
+
+
+def _insertion_upper_bound_unionfind(new_g: Graph, old_core_ext: np.ndarray,
+                                     inserted: np.ndarray) -> np.ndarray:
+    """Host-side union-find reference for ``_insertion_upper_bound``.
+
+    One arc sort + union-find sweep over levels per pass, O(m alpha) plus a
+    stack peel, all numpy/Python. Kept as the oracle the vectorized path is
+    property-tested against (tests/test_streaming.py).
     """
     n = new_g.n
     U = old_core_ext.astype(np.int64).copy()
@@ -207,7 +331,8 @@ def _insertion_upper_bound(new_g: Graph, old_core_ext: np.ndarray,
         U[marked] += 1
 
 
-def warm_start_seed(new_g: Graph, old_core: np.ndarray, delta: DeltaResult
+def warm_start_seed(new_g: Graph, old_core: np.ndarray,
+                    delta: ChurnDelta | DeltaResult
                     ) -> tuple[np.ndarray, np.ndarray]:
     """Sound upper-bound seed for the new graph's core numbers.
 
@@ -231,53 +356,11 @@ def warm_start_seed(new_g: Graph, old_core: np.ndarray, delta: DeltaResult
 # Frontier-localized re-convergence
 # ---------------------------------------------------------------------- #
 
-def _next_pow2(x: int) -> int:
-    return 1 << max(int(x) - 1, 0).bit_length()
-
-
 @functools.partial(jax.jit, static_argnames=("n", "n_iters"))
 def _compact_kernel(est_u, est_dst_masked, src, n, n_iters):
     """h-index over a pre-gathered compact frontier subproblem."""
     new = _hindex_by_bsearch(est_u, est_dst_masked, src, n, n_iters)
     return new, new < est_u
-
-
-def _compact_round(g: Graph, est: np.ndarray, active: np.ndarray,
-                   n_iters: int) -> tuple[np.ndarray, np.ndarray]:
-    """One superstep touching only the active subgraph.
-
-    Extracts the arcs sourced at active vertices, remaps them to a dense
-    [0, n_act) segment space padded to powers of two (so jit sees O(log n)
-    shapes over the whole stream), gathers the neighbor estimates host-side
-    (neighbors may be inactive — their values come from the full vector),
-    and runs the same binary-search h-index as the full-width path.
-    Returns (new_est, changed) full-size.
-    """
-    act_ids = np.flatnonzero(active)
-    if act_ids.size == 0:
-        return est, np.zeros(g.n, bool)
-    arc_sel = active[g.src]
-    sub_src = np.searchsorted(act_ids, g.src[arc_sel]).astype(np.int32)
-    sub_dst_est = est[g.dst[arc_sel]].astype(np.int32)
-
-    n_act_pad = _next_pow2(act_ids.size)
-    arc_pad = _next_pow2(max(sub_src.size, 1))
-    est_u = np.zeros(n_act_pad, np.int32)
-    est_u[: act_ids.size] = est[act_ids]
-    src_pad = np.full(arc_pad, n_act_pad - 1, np.int32)
-    src_pad[: sub_src.size] = sub_src
-    dst_est_pad = np.zeros(arc_pad, np.int32)   # 0 never counts for k >= 1
-    dst_est_pad[: sub_src.size] = sub_dst_est
-
-    new_sub, changed_sub = _compact_kernel(
-        jnp.asarray(est_u), jnp.asarray(dst_est_pad), jnp.asarray(src_pad),
-        n_act_pad, n_iters)
-
-    new_est = est.copy()
-    new_est[act_ids] = np.asarray(new_sub)[: act_ids.size]
-    changed = np.zeros(g.n, bool)
-    changed[act_ids] = np.asarray(changed_sub)[: act_ids.size]
-    return new_est, changed
 
 
 # ---------------------------------------------------------------------- #
@@ -290,32 +373,202 @@ class StreamingKCoreEngine:
     ``__init__`` pays one static decomposition; every ``apply_batch`` then
     re-converges incrementally from the previous fixpoint. ``self.core`` is
     exact after every batch (tested against the BZ oracle).
+
+    Pass ``mesh`` (+ ``axis_names``) to run mesh-native: the initial
+    decomposition uses the sharded static engine and churn batches with a
+    ``sharded``/``auto`` frontier iterate the masked shard_map superstep.
+    All execution modes are exact-equal in cores AND message counts, so a
+    mesh never changes an answer — only where the work runs.
     """
 
     def __init__(self, g: Graph, config: StreamingConfig = StreamingConfig(),
-                 kcore_config: KCoreConfig = KCoreConfig()):
-        if config.frontier not in ("dense", "compact"):
+                 kcore_config: KCoreConfig = KCoreConfig(),
+                 mesh=None, axis_names=("data",)):
+        if config.frontier not in FRONTIER_MODES:
             raise ValueError(f"unknown frontier mode {config.frontier!r}")
+        if config.frontier == "sharded" and mesh is None:
+            from repro.distribution.compat import make_mesh
+            mesh = make_mesh((jax.device_count(),), ("data",))
+            axis_names = ("data",)
         self.config = config
-        self.graph = g
-        init = kcore_decompose(g, kcore_config)
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names)
+        self._csr = PatchableCSR(g, slack=config.slack,
+                                 min_slack=config.min_slack,
+                                 compact_dead_frac=config.compact_dead_frac)
+        self._graph_cache: Graph | None = g
+        self._slots_cache: tuple | None = None
+        if mesh is not None and config.frontier in ("sharded", "auto"):
+            # sharded init: same cores/messages as the single-device static
+            # engine (tests/test_distributed.py), no host-side detour
+            init = kcore_decompose_sharded(g, mesh, self.axis_names,
+                                           max_rounds=kcore_config.max_rounds)
+        else:
+            init = kcore_decompose(g, kcore_config)
         self.core = init.core.astype(np.int32)
         self.init_result = init
         self.batches_applied = 0
 
     # ------------------------------------------------------------------ #
-    def apply_batch(self, batch: EdgeBatch) -> BatchResult:
-        delta = apply_batch(self.graph, batch)
-        g = delta.graph
-        n = g.n
-        seed, region = warm_start_seed(g, self.core, delta)
+    @property
+    def graph(self) -> Graph:
+        """The current graph, materialized lazily (O(m log m)) and cached.
 
-        old_core_ext = np.zeros(n, np.int32)
+        The engine itself never consumes this — supersteps and seeding run
+        on the patched CSR slot arrays; this is for callers (oracles,
+        benchmarks, churn samplers)."""
+        if self._graph_cache is None:
+            self._graph_cache = self._csr.to_graph()
+        return self._graph_cache
+
+    @property
+    def csr(self) -> PatchableCSR:
+        return self._csr
+
+    @property
+    def n(self) -> int:
+        """Vertex count — O(1), no Graph materialization."""
+        return self._csr.n
+
+    @property
+    def m(self) -> int:
+        """Edge count — O(1), no Graph materialization."""
+        return self._csr.m
+
+    def _padded_slots(self) -> tuple:
+        """(src, dst, live) slot arrays padded to pow2 capacity, cached
+        until the next batch mutates the CSR. Shared by the seed pass and
+        the dense superstep so their jitted programs see O(log) distinct
+        arc shapes over a whole churn stream (compactions change the raw
+        capacity arbitrarily)."""
+        if self._slots_cache is None:
+            csr = self._csr
+            C = csr.capacity
+            arc_pad = _next_pow2(max(C, 1))
+            src_np = np.zeros(arc_pad, np.int32)
+            src_np[:C] = csr.src
+            dst_np = np.zeros(arc_pad, np.int32)
+            dst_np[:C] = csr.dst
+            live_np = np.zeros(arc_pad, bool)
+            live_np[:C] = csr.live
+            self._slots_cache = (src_np, dst_np, live_np)
+        return self._slots_cache
+
+    # ------------------------------------------------------------------ #
+    def _resolve_mode(self, n: int, active: np.ndarray) -> str:
+        mode = self.config.frontier
+        if mode != "auto":
+            return mode
+        frac = float(active.sum()) / max(n, 1)
+        if frac <= self.config.compact_threshold:
+            return "compact"
+        return "sharded" if self.mesh is not None else "dense"
+
+    def _make_step(self, mode: str, n: int, n_iters: int):
+        """Build the per-round step(est, active) -> (new_est, changed, recv)
+        for one batch. All three implementations are exact-equal."""
+        csr = self._csr
+        src, dst, live, deg = csr.src, csr.dst, csr.live, csr.deg
+
+        if mode == "dense":
+            src_j, dst_j, amask_j = (jnp.asarray(a) for a in
+                                     self._padded_slots())
+
+            def step(est, active):
+                # est stays device-resident across rounds (the loop treats
+                # it opaquely); only the small bool masks come back to host
+                new_j, ch_j, recv_j = masked_round_segment(
+                    jnp.asarray(est), src_j, dst_j, amask_j,
+                    jnp.asarray(active), n, n_iters)
+                return new_j, np.asarray(ch_j), np.asarray(recv_j)
+
+            return step
+
+        if mode == "compact":
+            def step(est, active):
+                act_ids = np.flatnonzero(active)
+                if act_ids.size == 0:
+                    z = np.zeros(n, bool)
+                    return est, z, z
+                arc_sel = live & active[src]
+                sub_src = np.searchsorted(
+                    act_ids, src[arc_sel]).astype(np.int32)
+                sub_dst_est = est[dst[arc_sel]].astype(np.int32)
+
+                n_act_pad = _next_pow2(act_ids.size)
+                arc_pad = _next_pow2(max(sub_src.size, 1))
+                est_u = np.zeros(n_act_pad, np.int32)
+                est_u[: act_ids.size] = est[act_ids]
+                src_pad = np.full(arc_pad, n_act_pad - 1, np.int32)
+                src_pad[: sub_src.size] = sub_src
+                dst_est_pad = np.zeros(arc_pad, np.int32)  # 0 never counts
+                dst_est_pad[: sub_src.size] = sub_dst_est
+
+                new_sub, changed_sub = _compact_kernel(
+                    jnp.asarray(est_u), jnp.asarray(dst_est_pad),
+                    jnp.asarray(src_pad), n_act_pad, n_iters)
+
+                new_est = est.copy()
+                new_est[act_ids] = np.asarray(new_sub)[: act_ids.size]
+                changed = np.zeros(n, bool)
+                changed[act_ids] = np.asarray(changed_sub)[: act_ids.size]
+                recv = _receivers_arrays(n, src, dst, live, changed)
+                return new_est, changed, recv
+
+            return step
+
+        # sharded: shard the slot arrays (already src-sorted — no sort) and
+        # iterate the masked shard_map superstep
+        from repro.graph.partition import shard_arc_arrays
+
+        n_dev = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
+        sg = shard_arc_arrays(n, src, dst, live, deg, n_dev, pow2=True)
+        superstep, _ = make_sharded_superstep(sg, self.mesh, self.axis_names,
+                                              n_iters, masked=True)
+        V, n_pad = sg.verts_per_shard, sg.n_pad
+        src_j = jnp.asarray(sg.src)
+        dst_j = jnp.asarray(sg.dst)
+        amask_j = jnp.asarray(sg.arc_mask)
+        deg_j = jnp.asarray(sg.deg)
+
+        def step(est, active):
+            est_p = np.zeros(n_pad, np.int32)
+            est_p[:n] = est
+            act_p = np.zeros(n_pad, bool)
+            act_p[:n] = active
+            new_j, ch_j, recv_j, _msgs = superstep(
+                jnp.asarray(est_p.reshape(n_dev, V)), src_j, dst_j, amask_j,
+                deg_j, jnp.asarray(act_p.reshape(n_dev, V)))
+            new = np.asarray(new_j).reshape(-1)[:n]
+            ch = np.asarray(ch_j).reshape(-1)[:n]
+            recv = np.asarray(recv_j).reshape(-1)[:n]
+            return new, ch, recv
+
+        return step
+
+    # ------------------------------------------------------------------ #
+    def apply_batch(self, batch: EdgeBatch) -> BatchResult:
+        t0 = time.perf_counter()
+        delta = self._csr.apply_batch(batch)
+        patch_s = time.perf_counter() - t0
+        self._graph_cache = None
+        self._slots_cache = None
+        csr = self._csr
+        n = csr.n
+        src, dst, live = csr.src, csr.dst, csr.live
+        deg64 = csr.deg.astype(np.int64)
+
+        old_core_ext = np.zeros(n, np.int64)
         old_core_ext[: self.core.shape[0]] = self.core
-        deg64 = g.deg.astype(np.int64)
+        src_p, dst_p, live_p = self._padded_slots()
+        U = _insertion_upper_bound_arrays(n, src_p, dst_p, live_p, csr.deg,
+                                          old_core_ext, delta.inserted)
+        seed = np.minimum(U, deg64).astype(np.int32)
+        region = U > old_core_ext
+        old_core32 = old_core_ext.astype(np.int32)
 
         # ---- round 0: seed broadcast + link handshakes ---------------- #
-        seed_changed = seed != old_core_ext
+        seed_changed = seed != old_core32
         msgs = [int(deg64[seed_changed].sum())
                 + 2 * int(delta.inserted.shape[0])
                 + 2 * int(delta.deleted.shape[0])]
@@ -328,59 +581,31 @@ class StreamingKCoreEngine:
         touched = delta.touched[delta.touched < n]
         active[touched] = True
         active |= seed_changed
-        active |= _receivers_np(g, seed_changed)
+        active |= _receivers_arrays(n, src, dst, live, seed_changed)
         # active_per_round follows the static engine's convention:
         # [r] = vertices recomputing/broadcasting in round r. Round 0 is the
         # seed rebroadcast; round 1's recomputers are the initial frontier.
         actives = [int(seed_changed.sum()), int(active.sum())]
 
+        mode = self._resolve_mode(n, active)
         est = seed
         rounds, converged = 0, False
         cap = (self.config.max_rounds if self.config.max_rounds is not None
                else n + 1)
-        n_iters = _bs_iters(g.max_deg)
+        n_iters = _bs_iters(int(csr.deg.max()) if n else 0)
+        step = self._make_step(mode, n, n_iters)
 
-        if self.config.frontier == "dense":
-            # pad arcs to a power of two so the jitted superstep recompiles
-            # only O(log m) times over the whole update stream
-            arc_pad = _next_pow2(max(g.num_arcs, 1))
-            src_np = np.zeros(arc_pad, np.int32)
-            src_np[: g.num_arcs] = g.src
-            dst_np = np.zeros(arc_pad, np.int32)
-            dst_np[: g.num_arcs] = g.dst
-            amask_np = np.zeros(arc_pad, bool)
-            amask_np[: g.num_arcs] = True
-            est_j = jnp.asarray(est)
-            src_j = jnp.asarray(src_np)
-            dst_j = jnp.asarray(dst_np)
-            amask = jnp.asarray(amask_np)
-            while rounds < cap and active.any():
-                new_j, changed_j, recv_j = masked_round_segment(
-                    est_j, src_j, dst_j, amask, jnp.asarray(active),
-                    n, n_iters)
-                rounds += 1
-                ch = np.asarray(changed_j)
-                if not ch.any():
-                    converged = True
-                    break
-                msgs.append(int(deg64[ch].sum()))
-                changed_counts.append(int(ch.sum()))
-                active = np.asarray(recv_j)   # next frontier, from the device
-                actives.append(int(active.sum()))
-                est_j = new_j
-            est = np.asarray(est_j)
-        else:  # compact
-            while rounds < cap and active.any():
-                new_est, ch = _compact_round(g, est, active, n_iters)
-                rounds += 1
-                if not ch.any():
-                    converged = True
-                    break
-                msgs.append(int(deg64[ch].sum()))
-                changed_counts.append(int(ch.sum()))
-                active = _receivers_np(g, ch)
-                actives.append(int(active.sum()))
-                est = new_est
+        while rounds < cap and active.any():
+            new_est, ch, recv = step(est, active)
+            rounds += 1
+            if not ch.any():
+                converged = True
+                break
+            msgs.append(int(deg64[ch].sum()))
+            changed_counts.append(int(ch.sum()))
+            active = recv
+            actives.append(int(active.sum()))
+            est = new_est
         if not active.any():
             converged = True
 
@@ -391,10 +616,10 @@ class StreamingKCoreEngine:
             changed_per_round=np.asarray(changed_counts[: len(msgs)],
                                          np.int64),
         )
-        self.graph = g
         self.core = core
         self.batches_applied += 1
         return BatchResult(core=core, rounds=rounds, converged=converged,
                            stats=stats, delta=delta,
                            region_size=int(region.sum()),
-                           seed_changed=int(seed_changed.sum()))
+                           seed_changed=int(seed_changed.sum()),
+                           mode=mode, patch_s=patch_s)

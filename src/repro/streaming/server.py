@@ -51,8 +51,10 @@ class KCoreServer:
     """Serving facade over the incremental maintenance engine."""
 
     def __init__(self, g: Graph, config: StreamingConfig = StreamingConfig(),
-                 kcore_config: KCoreConfig = KCoreConfig()):
-        self.engine = StreamingKCoreEngine(g, config, kcore_config)
+                 kcore_config: KCoreConfig = KCoreConfig(),
+                 mesh=None, axis_names=("data",)):
+        self.engine = StreamingKCoreEngine(g, config, kcore_config,
+                                           mesh=mesh, axis_names=axis_names)
         self.queries_served = 0
         self.clients_answered = 0     # total vertex ids answered
         self.updates_applied = 0
@@ -81,7 +83,8 @@ class KCoreServer:
         return int(self.core.max()) if self.core.size else 0
 
     def _check_ids(self, v: np.ndarray) -> None:
-        if v.size and (v.min() < 0 or v.max() >= self.engine.graph.n):
+        # engine.n is O(1); engine.graph would materialize the full CSR
+        if v.size and (v.min() < 0 or v.max() >= self.engine.n):
             raise IndexError("vertex id out of range")
 
     # ---------------- updates ------------------------------------------ #
@@ -122,8 +125,8 @@ class KCoreServer:
 
     def stats(self) -> dict:
         return {
-            "n": self.engine.graph.n,
-            "m": self.engine.graph.m,
+            "n": self.engine.n,
+            "m": self.engine.m,
             "max_k": self.max_k(),
             "queries_served": self.queries_served,
             "clients_answered": self.clients_answered,

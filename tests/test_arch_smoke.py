@@ -1,7 +1,6 @@
 """Per-architecture smoke tests (deliverable f): every assigned arch runs a
 reduced-config forward/train step on CPU with shape + finiteness asserts."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Graph IO: dataCleanse parsing rules and round-trips."""
 
-import numpy as np
 
 from repro.graph.io import (parse_edge_list, parse_json_adjacency,
                             to_json_adjacency)

@@ -1,6 +1,5 @@
 """k-truss extra (paper §V future work): BSP iteration vs peeling oracle."""
 
-import numpy as np
 import pytest
 
 from repro.core.ktruss import ktruss_bsp, ktruss_peeling

@@ -1,5 +1,6 @@
-"""Streaming k-core maintenance: delta layer, incremental engine vs the BZ
-oracle under random churn, frontier modes, and the query server."""
+"""Streaming k-core maintenance: delta layer (rebuild + in-place CSR patch),
+incremental engine vs the BZ oracle under random churn, frontier modes, and
+the query server."""
 
 import numpy as np
 import pytest
@@ -7,10 +8,10 @@ import pytest
 from repro.core import bz_core_numbers, kcore_decompose
 from repro.graph import generators as gen
 from repro.graph.structs import Graph
-from repro.streaming import (EdgeBatch, KCoreServer, Request, StreamingConfig,
-                             StreamingKCoreEngine, apply_batch,
-                             canonical_edges, random_churn_batch,
-                             warm_start_seed)
+from repro.streaming import (EdgeBatch, KCoreServer, PatchableCSR, Request,
+                             StreamingConfig, StreamingKCoreEngine,
+                             apply_batch, canonical_edges,
+                             random_churn_batch, warm_start_seed)
 
 
 # ---------------------------------------------------------------------- #
@@ -61,8 +62,84 @@ def test_delta_grows_vertex_set():
 
 
 # ---------------------------------------------------------------------- #
+# In-place CSR patching
+# ---------------------------------------------------------------------- #
+
+def test_patched_csr_equals_rebuilt_csr_under_random_churn():
+    """Property: after every random churn batch the in-place patched CSR
+    materializes to the exact same Graph (src/dst/offsets/deg) as the
+    rebuild path, reports the identical effective delta, and its raw slot
+    arrays hold the same live arc multiset — across deletions creating
+    holes, inserts filling them, vertex growth, no-op churn, and forced
+    compactions (tight slack)."""
+    rng = np.random.default_rng(2)
+    g = gen.erdos_renyi(80, 220, seed=0)
+    patcher = PatchableCSR(g, slack=0.15, min_slack=2, compact_dead_frac=0.2)
+    for t in range(25):
+        batch = random_churn_batch(g, 10, 10, rng)
+        if t % 6 == 0:   # growth + duplicate + self-loop + unknown delete
+            batch = EdgeBatch.make(
+                insert=np.concatenate(
+                    [batch.insert, [[g.n + 1, 0], [3, 3], [1, 2], [2, 1]]]),
+                delete=np.concatenate([batch.delete, [[900, 901]]]))
+        ref = apply_batch(g, batch)
+        got = patcher.apply_batch(batch)
+        assert (got.inserted == ref.inserted).all()
+        assert (got.deleted == ref.deleted).all()
+        assert (got.touched == ref.touched).all()
+        # raw slot arrays: live arc multiset == the rebuilt arc set
+        live_arcs = np.stack([patcher.src[patcher.live],
+                              patcher.dst[patcher.live]], axis=1)
+        order = np.lexsort((live_arcs[:, 1], live_arcs[:, 0]))
+        assert (live_arcs[order, 0] == ref.graph.src).all()
+        assert (live_arcs[order, 1] == ref.graph.dst).all()
+        # materialized Graph: exact equality, valid CSR
+        mat = patcher.to_graph()
+        mat.validate()
+        assert mat.n == ref.graph.n and mat.m == ref.graph.m
+        assert (mat.src == ref.graph.src).all()
+        assert (mat.dst == ref.graph.dst).all()
+        assert (mat.offsets == ref.graph.offsets).all()
+        assert (mat.deg == ref.graph.deg).all()
+        g = ref.graph
+    assert patcher.compactions > 0   # the tight slack must have forced some
+
+
+def test_patched_csr_row_overflow_compacts():
+    """Inserting many edges at one vertex overflows its slack row and must
+    trigger a compaction, not corruption."""
+    g = Graph.from_edges([(0, 1)], n=6)
+    p = PatchableCSR(g, slack=0.0, min_slack=1)
+    res = p.apply_batch(EdgeBatch.make(insert=[(0, 2), (0, 3), (0, 4),
+                                               (0, 5)]))
+    assert res.compacted
+    assert p.m == 5
+    assert (p.to_graph().deg == np.array([5, 1, 1, 1, 1, 1])).all()
+
+
+# ---------------------------------------------------------------------- #
 # Warm-start seeding
 # ---------------------------------------------------------------------- #
+
+def test_vectorized_insertion_bound_matches_unionfind_reference():
+    """The jitted segment-op insertion upper bound must equal the host-side
+    union-find reference exactly (same passes, same peel fixpoints)."""
+    from repro.streaming.engine import (_insertion_upper_bound,
+                                        _insertion_upper_bound_unionfind)
+    rng = np.random.default_rng(7)
+    for g in (gen.erdos_renyi(100, 300, seed=2),
+              gen.barabasi_albert(120, 3, seed=2)):
+        core = bz_core_numbers(g).astype(np.int64)
+        for _ in range(4):
+            batch = random_churn_batch(g, 15, 10, rng)
+            d = apply_batch(g, batch)
+            oce = np.zeros(d.graph.n, np.int64)
+            oce[: g.n] = core
+            U_vec = _insertion_upper_bound(d.graph, oce, d.inserted)
+            U_ref = _insertion_upper_bound_unionfind(d.graph, oce,
+                                                     d.inserted)
+            assert (U_vec == U_ref).all()
+            g, core = d.graph, bz_core_numbers(d.graph).astype(np.int64)
 
 def test_seed_is_upper_bound_on_new_cores():
     """The locality theorem needs seed >= exact new cores pointwise; check

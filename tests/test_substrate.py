@@ -2,7 +2,6 @@
 compression, checkpoint + fault-tolerant driver, data pipeline."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
