@@ -1,0 +1,94 @@
+"""Shared scaffolding for the benchmark regression gates.
+
+A gate (streaming_gate, temporal_gate) runs its benchmark's
+``run_records``, writes the full structured output to a JSON artifact,
+optionally refreshes the committed baseline, and otherwise fails when any
+gated ``mean_ratio`` regresses past ``baseline * max_regression +
+abs_slack``. Message counts are exact and every generator is seeded, so
+for fixed settings the ratios are integer-deterministic — the threshold
+only has to absorb genuine algorithmic regressions, not noise.
+
+The baseline records the settings it was generated under; a run with
+different settings (e.g. a local full-scale run) skips the comparison
+instead of spuriously failing, unless ``--require-match`` is passed (CI
+passes it so editing bench settings without ``--write-baseline`` cannot
+silently disarm the gate).
+"""
+
+import argparse
+import json
+import pathlib
+
+GATE_HELP = "fail when mean_ratio > baseline * this factor + slack"
+MATCH_HELP = "fail on baseline-settings mismatch instead of skipping"
+
+
+def gate_main(*, run_records, settings, summarize, baseline, default_out,
+              label) -> int:
+    """One gate run; returns the process exit code.
+
+    ``run_records``/``settings``/``summarize`` are the benchmark module's
+    hooks; ``baseline`` is the committed baseline path; ``label`` names
+    the gate in its verdict lines.
+    """
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=default_out)
+    ap.add_argument("--baseline", default=str(baseline))
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--max-regression", type=float, default=1.5,
+                    help=GATE_HELP)
+    ap.add_argument("--abs-slack", type=float, default=0.01)
+    ap.add_argument("--require-match", action="store_true", help=MATCH_HELP)
+    args = ap.parse_args()
+
+    records = run_records()
+    summary = summarize(records)
+    payload = {"settings": settings(), "summary": summary,
+               "records": records}
+    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2))
+    print(f"wrote {args.out} ({len(records)} records)")
+
+    if args.write_baseline:
+        ratios = {k: v["mean_ratio"] for k, v in summary.items()}
+        base = {"settings": settings(), "mean_ratio": ratios}
+        pathlib.Path(args.baseline).write_text(json.dumps(base, indent=2))
+        print(f"wrote baseline {args.baseline}")
+        return 0
+
+    base_path = pathlib.Path(args.baseline)
+    if not base_path.exists():
+        print(f"no baseline at {args.baseline}; nothing to gate against")
+        return 1
+    base = json.loads(base_path.read_text())
+    if base.get("settings") != settings():
+        print(
+            "baseline settings differ from this run "
+            f"({base.get('settings')} vs {settings()})",
+        )
+        if args.require_match:
+            print("refusing to gate against a stale baseline; regenerate it")
+            return 1
+        print("skipping comparison (pass --require-match to fail instead)")
+        return 0
+
+    failures = []
+    for key, base_ratio in base["mean_ratio"].items():
+        cur = summary.get(key)
+        if cur is None:
+            failures.append(f"{key}: missing from current run")
+            continue
+        limit = base_ratio * args.max_regression + args.abs_slack
+        status = "OK" if cur["mean_ratio"] <= limit else "REGRESSED"
+        print(
+            f"{key}: ratio {cur['mean_ratio']} vs baseline {base_ratio} "
+            f"(limit {limit:.4f}) {status}",
+        )
+        if cur["mean_ratio"] > limit:
+            detail = f"(baseline {base_ratio})"
+            failures.append(
+                f"{key}: {cur['mean_ratio']} > {limit:.4f} {detail}")
+    if failures:
+        print(f"{label} message-ratio regression:", *failures, sep="\n  ")
+        return 1
+    print(f"{label} ratio gate passed")
+    return 0

@@ -20,6 +20,7 @@ BENCHES = {
     "beyond_gs": "benchmarks.beyond_block_gs",
     "roofline": "benchmarks.roofline",
     "streaming": "benchmarks.streaming_maintenance",
+    "temporal": "benchmarks.temporal_replay",
 }
 
 

@@ -4,12 +4,8 @@ Runs benchmarks.streaming_maintenance, writes the full structured output to
 a JSON artifact (BENCH_streaming.json), and fails if the per-(graph, churn)
 mean incremental/from-scratch message ratio regresses past a threshold
 against the committed baseline (benchmarks/streaming_baseline.json).
-
-The ratio is integer-deterministic for fixed settings (message counts are
-exact, the churn RNG is seeded), so the threshold only needs to absorb
-genuine algorithmic regressions, not noise. The baseline records the
-settings it was generated under; a run with different settings (e.g. a
-local full-scale run) skips the comparison instead of spuriously failing.
+Gate semantics (thresholds, baseline settings match, --write-baseline)
+live in benchmarks.gate_common, shared with the temporal gate.
 
     # CI (smoke settings; the workflow sets the env knobs):
     python -m benchmarks.streaming_gate
@@ -19,79 +15,24 @@ local full-scale run) skips the comparison instead of spuriously failing.
         python -m benchmarks.streaming_gate --write-baseline
 """
 
-import argparse
-import json
 import pathlib
 import sys
 
+from benchmarks.gate_common import gate_main
 from benchmarks.streaming_maintenance import run_records, settings, summarize
 
 BASELINE = pathlib.Path(__file__).parent / "streaming_baseline.json"
-GATE_HELP = "fail when mean_ratio > baseline * this factor + slack"
-MATCH_HELP = "fail on baseline-settings mismatch instead of skipping"
 
 
 def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_streaming.json")
-    ap.add_argument("--baseline", default=str(BASELINE))
-    ap.add_argument("--write-baseline", action="store_true")
-    ap.add_argument("--max-regression", type=float, default=1.5, help=GATE_HELP)
-    ap.add_argument("--abs-slack", type=float, default=0.01)
-    # CI passes this so editing the bench settings without --write-baseline
-    # cannot silently disarm the gate
-    ap.add_argument("--require-match", action="store_true", help=MATCH_HELP)
-    args = ap.parse_args()
-
-    records = run_records()
-    summary = summarize(records)
-    payload = {"settings": settings(), "summary": summary, "records": records}
-    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2))
-    print(f"wrote {args.out} ({len(records)} records)")
-
-    if args.write_baseline:
-        ratios = {k: v["mean_ratio"] for k, v in summary.items()}
-        base = {"settings": settings(), "mean_ratio": ratios}
-        pathlib.Path(args.baseline).write_text(json.dumps(base, indent=2))
-        print(f"wrote baseline {args.baseline}")
-        return 0
-
-    base_path = pathlib.Path(args.baseline)
-    if not base_path.exists():
-        print(f"no baseline at {args.baseline}; nothing to gate against")
-        return 1
-    base = json.loads(base_path.read_text())
-    if base.get("settings") != settings():
-        print(
-            "baseline settings differ from this run "
-            f"({base.get('settings')} vs {settings()})",
-        )
-        if args.require_match:
-            print("refusing to gate against a stale baseline; regenerate it")
-            return 1
-        print("skipping comparison (pass --require-match to fail instead)")
-        return 0
-
-    failures = []
-    for key, base_ratio in base["mean_ratio"].items():
-        cur = summary.get(key)
-        if cur is None:
-            failures.append(f"{key}: missing from current run")
-            continue
-        limit = base_ratio * args.max_regression + args.abs_slack
-        status = "OK" if cur["mean_ratio"] <= limit else "REGRESSED"
-        print(
-            f"{key}: ratio {cur['mean_ratio']} vs baseline {base_ratio} "
-            f"(limit {limit:.4f}) {status}",
-        )
-        if cur["mean_ratio"] > limit:
-            detail = f"(baseline {base_ratio})"
-            failures.append(f"{key}: {cur['mean_ratio']} > {limit:.4f} {detail}")
-    if failures:
-        print("streaming message-ratio regression:", *failures, sep="\n  ")
-        return 1
-    print("streaming ratio gate passed")
-    return 0
+    return gate_main(
+        run_records=run_records,
+        settings=settings,
+        summarize=summarize,
+        baseline=BASELINE,
+        default_out="BENCH_streaming.json",
+        label="streaming",
+    )
 
 
 if __name__ == "__main__":

@@ -48,7 +48,8 @@ BATCHES = int(os.environ.get("REPRO_STREAM_BENCH_BATCHES", "5"))
 COLUMNS = ("graph", "n", "m", "churn", "batch", "inserted", "deleted",
            "inc_messages", "scratch_messages", "ratio", "inc_rounds",
            "scratch_rounds", "region", "mode", "patch_ms", "rebuild_ms",
-           "sharded_ok", "oracle_ok")
+           "compactions", "dead_frac", "occupancy", "sharded_ok",
+           "oracle_ok")
 
 
 def settings() -> dict:
@@ -109,6 +110,11 @@ def run_records() -> list[dict]:
                     "mode": res.mode,
                     "patch_ms": round(res.patch_s * 1e3, 3),
                     "rebuild_ms": round(rebuild_s * 1e3, 3),
+                    # PatchableCSR health — compaction behavior over the
+                    # stream (cumulative count, fragmentation, slack usage)
+                    "compactions": res.csr_compactions,
+                    "dead_frac": round(res.csr_dead_frac, 4),
+                    "occupancy": round(res.csr_occupancy, 4),
                     "sharded_ok": sharded_ok, "oracle_ok": ok,
                 })
     return records
@@ -125,6 +131,9 @@ def summarize(records: list[dict]) -> dict:
                                3),
         "mean_rebuild_ms": round(float(np.mean([r["rebuild_ms"]
                                                 for r in rs])), 3),
+        "compactions": int(rs[-1]["compactions"]),
+        "mean_occupancy": round(float(np.mean([r["occupancy"]
+                                               for r in rs])), 4),
     } for key, rs in out.items()}
 
 
@@ -134,8 +143,11 @@ def run() -> list[str]:
     rows.extend(csv_row(*(r[c] for c in COLUMNS)) for r in records)
     for key, s in summarize(records).items():
         graph, churn = key.split("/")
-        rows.append(csv_row(
-            graph, "", "", churn, "mean", "", "", "", "", s["mean_ratio"],
-            "", "", "", "", s["mean_patch_ms"], s["mean_rebuild_ms"],
-            "", ""))
+        mean = {c: "" for c in COLUMNS}
+        mean.update(graph=graph, churn=churn, batch="mean",
+                    ratio=s["mean_ratio"], patch_ms=s["mean_patch_ms"],
+                    rebuild_ms=s["mean_rebuild_ms"],
+                    compactions=s["compactions"],
+                    occupancy=s["mean_occupancy"])
+        rows.append(csv_row(*(mean[c] for c in COLUMNS)))
     return rows

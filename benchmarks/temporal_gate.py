@@ -1,0 +1,40 @@
+"""CI perf gate over the temporal replay benchmark.
+
+Runs benchmarks.temporal_replay (every step BZ-oracle-verified inside the
+benchmark), writes the full structured output to a JSON artifact
+(BENCH_temporal.json), and fails if any per-trace mean incremental/
+from-scratch message ratio regresses past a threshold against the
+committed baseline (benchmarks/temporal_baseline.json). Gate semantics
+(thresholds, baseline settings match, --write-baseline) live in
+benchmarks.gate_common, shared with the streaming gate.
+
+    # CI (smoke settings; the workflow sets the env knobs):
+    python -m benchmarks.temporal_gate
+
+    # refresh the committed baseline after an intended perf change:
+    REPRO_TEMPORAL_BENCH_N=600 REPRO_TEMPORAL_BENCH_STEPS=4 \
+        python -m benchmarks.temporal_gate --write-baseline
+"""
+
+import pathlib
+import sys
+
+from benchmarks.gate_common import gate_main
+from benchmarks.temporal_replay import run_records, settings, summarize
+
+BASELINE = pathlib.Path(__file__).parent / "temporal_baseline.json"
+
+
+def main() -> int:
+    return gate_main(
+        run_records=run_records,
+        settings=settings,
+        summarize=summarize,
+        baseline=BASELINE,
+        default_out="BENCH_temporal.json",
+        label="temporal",
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,157 @@
+"""Temporal replay benchmark: windowed maintenance over timestamped streams.
+
+Replays sliding windows over temporal traces (repro.temporal) through the
+incremental engine and reports, per window advance: the message bill vs a
+from-scratch decomposition of the same window graph, re-convergence
+rounds, CSR patch health (compactions / fragmentation / slack occupancy),
+and host-side wall cost: ``patch_ms`` (CSR patching), ``step_ms`` (the
+whole advance), and ``ms_per_round`` = step_ms / rounds — an UPPER BOUND
+on per-round host overhead (it also amortizes the window edge-set diff
+and the patch over the rounds), sizing the ROADMAP device-resident
+while_loop round-fusion item. Every step is BZ-oracle verified, so the
+ratio column is only meaningful because the windowed cores are exact.
+
+Traces (>= 3 regimes):
+
+  * ``EEN``/``FC`` — temporal SNAP analogues: growth-ordered arrivals with
+    heavy-tailed inter-arrival times and 15% link-decay removals;
+  * ``ba`` — timestamped preferential attachment with removals;
+  * ``contact`` — contact-network bursts (add/remove churn dominated,
+    recurring re-insertion).
+
+``benchmarks.temporal_gate`` turns the per-trace mean ratios into a CI
+regression gate against ``benchmarks/temporal_baseline.json`` and writes
+the full structured output as ``BENCH_temporal.json``.
+
+Environment knobs (for CI smoke):
+  REPRO_TEMPORAL_BENCH_N       target vertex count       (default 10000)
+  REPRO_TEMPORAL_BENCH_STEPS   window advances per trace (default 8)
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import kcore_decompose
+from repro.graph import generators as gen
+from repro.temporal import (contact_bursts, replay,
+                            temporal_barabasi_albert,
+                            temporal_snap_analogue)
+
+TARGET_N = int(os.environ.get("REPRO_TEMPORAL_BENCH_N", "10000"))
+STEPS = int(os.environ.get("REPRO_TEMPORAL_BENCH_STEPS", "8"))
+
+# Trace geometry — recorded in settings() so the gate's --require-match
+# catches workload edits, not just env-knob changes (a changed workload
+# must ship a regenerated baseline).
+TRACE_NAMES = ("EEN", "FC", "ba", "contact")
+WINDOW_STRIDES = 3            # window size in strides
+SNAP_REMOVE_FRAC = 0.15       # link-decay removals in the SNAP analogues
+BA_REMOVE_FRAC = 0.1
+
+COLUMNS = ("trace", "n", "events", "window", "stride", "step", "m",
+           "inserted", "deleted", "messages", "scratch_messages", "ratio",
+           "rounds", "frontier_peak", "mode", "patch_ms", "step_ms",
+           "ms_per_round", "compactions", "dead_frac", "occupancy",
+           "core_max", "oracle_ok")
+
+
+def traces() -> list[tuple[str, object, float, float, str]]:
+    """(name, log, window, stride, by) per trace — sized off TARGET_N/STEPS
+    so every trace yields ~STEPS window advances with sliding (not only
+    growing) windows. ``by`` travels with the trace because window/stride
+    are in by-dependent units (events vs time spans)."""
+    out = []
+    for abbrev in ("EEN", "FC"):
+        entry = gen.SNAP_BY_ABBREV[abbrev]
+        log = temporal_snap_analogue(abbrev, scale=TARGET_N / entry.n,
+                                     seed=0,
+                                     remove_frac=SNAP_REMOVE_FRAC)
+        stride = max(len(log) // (STEPS + 2), 1)
+        out.append((abbrev, log, WINDOW_STRIDES * stride, stride, "count"))
+    blog = temporal_barabasi_albert(TARGET_N, 3, seed=0,
+                                    remove_frac=BA_REMOVE_FRAC)
+    stride = max(len(blog) // (STEPS + 2), 1)
+    out.append(("ba", blog, WINDOW_STRIDES * stride, stride, "count"))
+    clog = contact_bursts(max(TARGET_N // 10, 20),
+                          n_bursts=4 * STEPS, seed=0)
+    span = clog.t_max - clog.t_min
+    stride = max(span / (STEPS + 2), 1e-9)
+    out.append(("contact", clog, WINDOW_STRIDES * stride, stride, "time"))
+    return out
+
+
+def settings() -> dict:
+    return {"target_n": TARGET_N, "steps": STEPS,
+            "traces": list(TRACE_NAMES),
+            "window_strides": WINDOW_STRIDES,
+            "snap_remove_frac": SNAP_REMOVE_FRAC,
+            "ba_remove_frac": BA_REMOVE_FRAC}
+
+
+def run_records() -> list[dict]:
+    """Structured per-step records (CSV in run(), JSON in temporal_gate)."""
+    records = []
+    for name, log, window, stride, by in traces():
+        traj = replay(log, window, stride, by=by, oracle_every=1,
+                      max_steps=STEPS)
+        # from-scratch message bill of each window graph, for the ratio
+        for rec in traj.records:
+            wg = log.graph_between(rec.lo, rec.hi)
+            scratch = kcore_decompose(wg)
+            scratch_msgs = int(scratch.stats.total_messages)
+            records.append({
+                "trace": name, "n": log.n, "events": len(log),
+                "window": round(float(window), 3),
+                "stride": round(float(stride), 3),
+                "step": rec.step, "m": rec.m,
+                "inserted": rec.inserted, "deleted": rec.deleted,
+                "messages": rec.messages,
+                "scratch_messages": scratch_msgs,
+                "ratio": round(rec.messages / max(scratch_msgs, 1), 4),
+                "rounds": rec.rounds, "frontier_peak": rec.frontier_peak,
+                "mode": rec.mode, "patch_ms": rec.patch_ms,
+                "step_ms": rec.step_ms,
+                "ms_per_round": round(rec.step_ms / max(rec.rounds, 1), 3),
+                "compactions": rec.csr_compactions,
+                "dead_frac": rec.csr_dead_frac,
+                "occupancy": rec.csr_occupancy,
+                "core_max": rec.core_max,
+                "oracle_ok": bool(rec.oracle_ok),
+            })
+    return records
+
+
+def summarize(records: list[dict]) -> dict:
+    """Per-trace means — the gated signal plus host-overhead telemetry."""
+    out: dict = {}
+    for r in records:
+        out.setdefault(r["trace"], []).append(r)
+    return {trace: {
+        "mean_ratio": round(float(np.mean([r["ratio"] for r in rs])), 4),
+        "mean_messages": round(float(np.mean([r["messages"]
+                                              for r in rs])), 1),
+        "mean_patch_ms": round(float(np.mean([r["patch_ms"]
+                                              for r in rs])), 3),
+        "mean_ms_per_round": round(float(np.mean([r["ms_per_round"]
+                                                  for r in rs])), 3),
+        "compactions": int(rs[-1]["compactions"]),
+    } for trace, rs in out.items()}
+
+
+def run() -> list[str]:
+    records = run_records()
+    rows = [csv_row(*COLUMNS)]
+    rows.extend(csv_row(*(r[c] for c in COLUMNS)) for r in records)
+    for trace, s in summarize(records).items():
+        mean = {c: "" for c in COLUMNS}
+        mean.update(trace=trace, step="mean", ratio=s["mean_ratio"],
+                    messages=s["mean_messages"],
+                    patch_ms=s["mean_patch_ms"],
+                    ms_per_round=s["mean_ms_per_round"],
+                    compactions=s["compactions"])
+        rows.append(csv_row(*(mean[c] for c in COLUMNS)))
+    return rows

@@ -6,6 +6,12 @@
     PYTHONPATH=src python -m repro.launch.kcore_serve --graph ba --mesh 4 \
         --frontier sharded --verify
 
+    # temporal replay: slide a window over a timestamped event stream
+    PYTHONPATH=src python -m repro.launch.kcore_serve --events snap:FC \
+        --scale 0.05 --window 3000 --stride 500 --verify
+    PYTHONPATH=src python -m repro.launch.kcore_serve --events trace.npz \
+        --window 60 --stride 10 --by time --queries 10000
+
 Each tick applies one churn batch (--churn fraction of current edges, split
 between deletes and inserts) through the incremental engine, then answers a
 batched query load (--queries core-number lookups plus k-core membership and
@@ -14,6 +20,17 @@ index instead of a per-request decomposition. Prints one CSV row per tick:
 incremental vs from-scratch message bill, re-convergence rounds, region size,
 and query throughput. --verify additionally checks every tick against the BZ
 oracle (slow; for demos and CI smoke).
+
+--events switches the update source from synthetic uniform churn to a
+TEMPORAL REPLAY (repro.temporal): a tick slides a count- or time-based
+window (--window/--stride/--by) over the event stream, the insert/expire
+delta re-converges incrementally, and every boundary's core vector is
+checkpointed into the server's as-of ring — each tick additionally answers
+a ``core_asof`` query against a random retained boundary. --events takes a
+path (.npz or text event log) or a generator spec: ``snap:<ABBREV>``
+(temporal SNAP analogue at --scale, with --remove-frac removal events),
+``ba`` (timestamped preferential attachment at --n), or ``contact``
+(contact-network bursts at --n).
 
 --mesh N runs the maintenance engine mesh-native on an N-device ("data",)
 mesh: the initial decomposition and the per-batch masked supersteps execute
@@ -52,6 +69,21 @@ def parse_args():
                          "0 = single device (default)")
     ap.add_argument("--verify", action="store_true",
                     help="check vs the BZ oracle every tick (slow)")
+    # temporal replay mode (repro.temporal)
+    ap.add_argument("--events", default=None, metavar="SRC",
+                    help="replay a timestamped event stream instead of "
+                         "synthetic churn: a .npz/text event-log path or "
+                         "a generator spec (snap:<ABBREV> | ba | contact)")
+    ap.add_argument("--window", type=float, default=2000,
+                    help="window size: events (--by count) or time span "
+                         "(--by time)")
+    ap.add_argument("--stride", type=float, default=500,
+                    help="window advance per tick, same unit as --window")
+    ap.add_argument("--by", default="count", choices=["count", "time"])
+    ap.add_argument("--remove-frac", type=float, default=0.15,
+                    help="removal-event fraction for generated traces")
+    ap.add_argument("--asof-capacity", type=int, default=16,
+                    help="retained window boundaries for core_asof queries")
     return ap.parse_args()
 
 
@@ -64,6 +96,82 @@ def build_graph(args, generators):
         return generators.erdos_renyi(args.n, 4 * args.n, seed=args.seed)
     return generators.snap_analogue(args.graph, scale=args.scale,
                                     seed=args.seed)
+
+
+def build_event_log(args):
+    """Resolve --events: a generator spec or an on-disk log."""
+    from repro import temporal
+    src = args.events
+    if src.startswith("snap:"):
+        return temporal.temporal_snap_analogue(
+            src.split(":", 1)[1], scale=args.scale, seed=args.seed,
+            remove_frac=args.remove_frac)
+    if src == "ba":
+        return temporal.temporal_barabasi_albert(
+            args.n, 4, seed=args.seed, remove_frac=args.remove_frac)
+    if src == "contact":
+        return temporal.contact_bursts(args.n, seed=args.seed)
+    return temporal.load_event_log(src)
+
+
+def replay_serve(args, mesh) -> None:
+    """Temporal replay loop: window advances + query load + as-of probes."""
+    import numpy as np
+
+    from repro.core import kcore_decompose
+    from repro.streaming import KCoreServer, Request, StreamingConfig
+    from repro.temporal import WindowedKCoreEngine, check_step
+
+    log = build_event_log(args)
+    t0 = time.perf_counter()
+    weng = WindowedKCoreEngine(log, args.window, args.stride, by=args.by,
+                               config=StreamingConfig(
+                                   frontier=args.frontier),
+                               mesh=mesh)
+    server = KCoreServer(windowed=weng, asof_capacity=args.asof_capacity)
+    print(f"# events={args.events} n={log.n} log_events={len(log)} "
+          f"adds={log.num_adds} window={args.window} stride={args.stride} "
+          f"by={args.by} mesh={args.mesh or 1} frontier={args.frontier} "
+          f"init_wall_s={time.perf_counter() - t0:.2f}")
+    rng = np.random.default_rng(args.seed)
+
+    print("tick,t_hi,m,inserted,deleted,inc_messages,scratch_messages,"
+          "ratio,rounds,mode,patch_s,compactions,occupancy,queries,query_s,"
+          "max_k,asof_t,verified")
+    tick = 0
+    while not weng.done and tick < args.batches:
+        ws = server.advance_window()
+        res = ws.result
+
+        qids = rng.integers(0, log.n, size=args.queries)
+        asof_t = float(rng.choice(server.asof_boundaries()))
+        reqs = [Request(op="core", vertices=qids),
+                Request(op="in_kcore", vertices=qids[: args.queries // 2],
+                        k=max(server.max_k() - 1, 1)),
+                Request(op="core_asof", t=asof_t,
+                        vertices=qids[: args.queries // 2]),
+                Request(op="max_k")]
+        t0 = time.perf_counter()
+        server.serve(reqs)
+        query_s = time.perf_counter() - t0
+
+        wg = weng.window_graph()
+        scratch = kcore_decompose(wg)
+        verified = ""
+        if args.verify:
+            verified = str(check_step(weng, ws))
+        ratio = res.total_messages / max(scratch.stats.total_messages, 1)
+        print(",".join(str(c) for c in (
+            tick, round(ws.t_hi, 3), ws.m, res.delta.inserted.shape[0],
+            res.delta.deleted.shape[0], res.total_messages,
+            scratch.stats.total_messages, round(ratio, 4), res.rounds,
+            res.mode, round(res.patch_s, 5), res.csr_compactions,
+            round(res.csr_occupancy, 3), args.queries, round(query_s, 4),
+            server.max_k(), round(asof_t, 3), verified)))
+        tick += 1
+
+    print(f"# asof_boundaries={np.round(server.asof_boundaries(), 3).tolist()}")
+    print(f"# final_stats={server.stats()}")
 
 
 def main() -> None:
@@ -88,6 +196,10 @@ def main() -> None:
         mesh = make_mesh((args.mesh,), ("data",))
         if args.frontier == "dense":
             args.frontier = "sharded"
+
+    if args.events:
+        replay_serve(args, mesh)
+        return
 
     g = build_graph(args, generators)
     t0 = time.perf_counter()

@@ -18,7 +18,8 @@ from repro.streaming.delta import (ChurnDelta, DeltaResult, EdgeBatch,
                                    canonical_edges, random_churn_batch)
 from repro.streaming.engine import (BatchResult, StreamingConfig,
                                     StreamingKCoreEngine, warm_start_seed)
-from repro.streaming.server import KCoreServer, Request, Response
+from repro.streaming.server import (CoreCheckpointRing, KCoreServer,
+                                    Request, Response)
 
 __all__ = [
     "EdgeBatch",
@@ -33,6 +34,7 @@ __all__ = [
     "BatchResult",
     "warm_start_seed",
     "KCoreServer",
+    "CoreCheckpointRing",
     "Request",
     "Response",
 ]

@@ -82,9 +82,16 @@ def _canonicalize(pairs: np.ndarray) -> np.ndarray:
     return np.unique(canon, axis=0)
 
 
-def _keys(edges: np.ndarray, n: int) -> np.ndarray:
-    """Encode canonical edges as scalar keys u * n + v for set algebra."""
+def edge_keys(edges: np.ndarray, n: int) -> np.ndarray:
+    """Encode canonical edges as scalar keys u * n + v for set algebra.
+
+    The one canonical key scheme for edge-set membership/diff across the
+    streaming and temporal layers (temporal/window.py uses it for window
+    deltas; temporal/events.py applies the same encoding columnwise)."""
     return edges[:, 0] * np.int64(n) + edges[:, 1]
+
+
+_keys = edge_keys          # internal alias, predates the public name
 
 
 def apply_batch(g: Graph, batch: EdgeBatch) -> DeltaResult:

@@ -103,6 +103,11 @@ class BatchResult:
     mode: str = "dense"       # execution mode this batch actually ran in
     patch_s: float = 0.0      # host seconds spent patching the CSR in place
     # (whether the batch forced an O(m) CSR compaction: delta.compacted)
+    # PatchableCSR health after the batch — long churn streams live or die
+    # by compaction behavior, so it is first-class, not property-test-only:
+    csr_compactions: int = 0  # cumulative O(m) compactions so far
+    csr_dead_frac: float = 0.0   # hole slots / capacity (fragmentation)
+    csr_occupancy: float = 0.0   # live arc slots / capacity (slack usage)
 
     @property
     def total_messages(self) -> int:
@@ -618,8 +623,12 @@ class StreamingKCoreEngine:
         )
         self.core = core
         self.batches_applied += 1
+        cap_slots = max(csr.capacity, 1)
         return BatchResult(core=core, rounds=rounds, converged=converged,
                            stats=stats, delta=delta,
                            region_size=int(region.sum()),
                            seed_changed=int(seed_changed.sum()),
-                           mode=mode, patch_s=patch_s)
+                           mode=mode, patch_s=patch_s,
+                           csr_compactions=int(csr.compactions),
+                           csr_dead_frac=csr.dead / cap_slots,
+                           csr_occupancy=2 * csr.m / cap_slots)

@@ -14,14 +14,22 @@ Supported ops
   * ``in_kcore``  — k-core membership for a batch of vertex ids;
   * ``members``   — all vertices of the k-core;
   * ``max_k``     — the degeneracy (largest non-empty k);
-  * ``update``    — apply an EdgeBatch through the incremental engine.
+  * ``update``    — apply an EdgeBatch through the incremental engine;
+  * ``core_asof`` — core numbers AT TIME t, answered from the ring of
+    core vectors checkpointed at window boundaries (temporal replay mode,
+    repro.temporal): O(1) per lookup for any retained boundary.
+
+A server can be constructed over a static Graph (churn arrives as explicit
+``update`` batches) or over a ``WindowedKCoreEngine`` (temporal mode:
+``advance_window`` slides the window, and every boundary's core vector is
+checkpointed into the as-of ring).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Iterable
+from typing import TYPE_CHECKING, Any, Iterable
 
 import numpy as np
 
@@ -31,13 +39,17 @@ from repro.streaming.delta import EdgeBatch
 from repro.streaming.engine import (BatchResult, StreamingConfig,
                                     StreamingKCoreEngine)
 
+if TYPE_CHECKING:   # temporal depends on streaming, never the reverse
+    from repro.temporal.window import WindowedKCoreEngine, WindowStep
+
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    op: str                       # core | in_kcore | members | max_k | update
-    vertices: np.ndarray | None = None   # core / in_kcore
+    op: str          # core | in_kcore | members | max_k | update | core_asof
+    vertices: np.ndarray | None = None   # core / in_kcore / core_asof
     k: int | None = None                 # in_kcore / members
     batch: EdgeBatch | None = None       # update
+    t: float | None = None               # core_asof
 
 
 @dataclasses.dataclass
@@ -47,14 +59,81 @@ class Response:
     wall_s: float
 
 
+class CoreCheckpointRing:
+    """Bounded ring of (t, core) snapshots for as-of queries.
+
+    ``push`` records the core vector at a window boundary (a read-only
+    copy — retained history cannot be corrupted through the returned
+    references); ``asof(t)`` returns the snapshot at the latest retained
+    boundary with boundary-time <= t — an O(log capacity) searchsorted
+    plus an O(1) vector reference, independent of graph size or stream
+    length. Callers that want to mutate the result must copy it."""
+
+    def __init__(self, capacity: int = 16):
+        if capacity < 1:
+            raise ValueError("ring capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._times: list[float] = []
+        self._cores: list[np.ndarray] = []
+
+    def __len__(self) -> int:
+        return len(self._times)
+
+    @property
+    def times(self) -> np.ndarray:
+        """Retained boundary times, oldest first."""
+        return np.asarray(self._times, np.float64)
+
+    def push(self, t: float, core: np.ndarray) -> None:
+        t = float(t)
+        if self._times and t < self._times[-1]:
+            raise ValueError("checkpoint times must be non-decreasing")
+        snap = np.asarray(core, np.int32).copy()
+        snap.setflags(write=False)
+        self._times.append(t)
+        self._cores.append(snap)
+        if len(self._times) > self.capacity:
+            del self._times[0], self._cores[0]
+
+    def asof(self, t: float) -> tuple[float, np.ndarray]:
+        """(boundary_time, core) at the latest boundary <= t."""
+        if not self._times:
+            raise KeyError("no checkpoints retained")
+        i = int(np.searchsorted(self._times, float(t), side="right")) - 1
+        if i < 0:
+            raise KeyError(
+                f"t={t} predates the oldest retained boundary "
+                f"({self._times[0]}); increase the ring capacity")
+        return self._times[i], self._cores[i]
+
+
 class KCoreServer:
     """Serving facade over the incremental maintenance engine."""
 
-    def __init__(self, g: Graph, config: StreamingConfig = StreamingConfig(),
+    def __init__(self, g: Graph | None = None,
+                 config: StreamingConfig = StreamingConfig(),
                  kcore_config: KCoreConfig = KCoreConfig(),
-                 mesh=None, axis_names=("data",)):
-        self.engine = StreamingKCoreEngine(g, config, kcore_config,
-                                           mesh=mesh, axis_names=axis_names)
+                 mesh=None, axis_names=("data",),
+                 windowed: WindowedKCoreEngine | None = None,
+                 asof_capacity: int = 16):
+        if (g is None) == (windowed is None):
+            raise ValueError("pass exactly one of g / windowed")
+        if windowed is not None:
+            if (mesh is not None or axis_names != ("data",)
+                    or config != StreamingConfig()
+                    or kcore_config != KCoreConfig()):
+                raise ValueError(
+                    "windowed mode: config/kcore_config/mesh/axis_names "
+                    "belong to the WindowedKCoreEngine — pass them to its "
+                    "constructor, the server would silently ignore them")
+            self.windowed = windowed
+            self.engine = windowed.engine
+        else:
+            self.windowed = None
+            self.engine = StreamingKCoreEngine(g, config, kcore_config,
+                                               mesh=mesh,
+                                               axis_names=axis_names)
+        self.asof_ring = CoreCheckpointRing(asof_capacity)
         self.queries_served = 0
         self.clients_answered = 0     # total vertex ids answered
         self.updates_applied = 0
@@ -87,8 +166,31 @@ class KCoreServer:
         if v.size and (v.min() < 0 or v.max() >= self.engine.n):
             raise IndexError("vertex id out of range")
 
+    # ---------------- as-of queries (temporal mode) --------------------- #
+    def core_asof(self, t: float, vertices=None) -> tuple[float, np.ndarray]:
+        """Core numbers at time ``t``: the vector checkpointed at the
+        latest retained window boundary <= t (KeyError if t predates the
+        ring). Returns (boundary_time, cores)."""
+        if t is None:
+            raise ValueError("core_asof requires t")
+        bt, core = self.asof_ring.asof(t)
+        if vertices is None:
+            return bt, core
+        v = np.asarray(vertices, np.int64).reshape(-1)
+        self._check_ids(v)
+        return bt, core[v]
+
+    def asof_boundaries(self) -> np.ndarray:
+        """Boundary times currently answerable by ``core_asof``."""
+        return self.asof_ring.times
+
     # ---------------- updates ------------------------------------------ #
     def update(self, batch: EdgeBatch) -> BatchResult:
+        if self.windowed is not None:
+            # mutating the engine behind the window's edge-set bookkeeping
+            # would silently corrupt every later boundary delta
+            raise ValueError("windowed mode: the event stream owns the "
+                             "graph — advance_window() instead of update()")
         t0 = time.perf_counter()
         res = self.engine.apply_batch(batch)
         self.update_wall_s += time.perf_counter() - t0
@@ -96,6 +198,21 @@ class KCoreServer:
         self.update_messages += res.total_messages
         self.update_rounds += res.rounds
         return res
+
+    def advance_window(self, k: int = 1) -> WindowStep:
+        """Temporal mode: slide the window k strides, re-converge, and
+        checkpoint the boundary's core vector into the as-of ring."""
+        if self.windowed is None:
+            raise ValueError("server was not constructed over a "
+                             "WindowedKCoreEngine")
+        t0 = time.perf_counter()
+        ws = self.windowed.advance(k)
+        self.update_wall_s += time.perf_counter() - t0
+        self.updates_applied += 1
+        self.update_messages += ws.result.total_messages
+        self.update_rounds += ws.result.rounds
+        self.asof_ring.push(ws.t_hi, ws.result.core)
+        return ws
 
     # ---------------- request loop ------------------------------------- #
     def serve(self, requests: Iterable[Request]) -> list[Response]:
@@ -112,6 +229,9 @@ class KCoreServer:
                 payload = self.kcore_members(req.k)
             elif req.op == "max_k":
                 payload = self.max_k()
+            elif req.op == "core_asof":
+                payload = self.core_asof(req.t, req.vertices)
+                self.clients_answered += payload[1].size
             elif req.op == "update":
                 payload = self.update(req.batch)
             else:
@@ -135,4 +255,5 @@ class KCoreServer:
             "update_rounds": self.update_rounds,
             "query_wall_s": round(self.query_wall_s, 4),
             "update_wall_s": round(self.update_wall_s, 4),
+            "asof_boundaries": len(self.asof_ring),
         }

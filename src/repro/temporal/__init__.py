@@ -1,0 +1,47 @@
+"""Temporal graph subsystem: timestamped event streams, sliding-window
+k-core maintenance, and as-of queries.
+
+Layers (built on the streaming maintenance engine, repro.streaming):
+
+  * ``events`` — columnar timestamped edge-event logs (add/remove with
+    monotone timestamps), text/npz round-trip, and temporal trace
+    generators (timestamped preferential attachment, contact bursts,
+    temporal SNAP analogues);
+  * ``window`` — ``WindowedKCoreEngine``: slides a count- or time-based
+    window over a stream, feeding window advances to the incremental
+    engine as EdgeBatches (exact cores at every boundary), plus the
+    ``CoreCheckpointRing`` as-of store;
+  * ``replay`` — replay driver recording per-step stats into a
+    core-evolution trajectory with periodic BZ-oracle cross-checks.
+"""
+
+from repro.temporal.events import (ADD, REMOVE, EdgeEvent, EventLog,
+                                   contact_bursts, load_event_log,
+                                   parse_event_text,
+                                   temporal_barabasi_albert,
+                                   temporal_snap_analogue)
+from repro.temporal.replay import (ReplayRecord, ReplayTrajectory,
+                                   check_step, replay)
+from repro.temporal.window import WindowedKCoreEngine, WindowStep
+# the as-of store lives with the serving layer; re-exported here because
+# it is the temporal query surface
+from repro.streaming.server import CoreCheckpointRing
+
+__all__ = [
+    "ADD",
+    "REMOVE",
+    "EdgeEvent",
+    "EventLog",
+    "parse_event_text",
+    "load_event_log",
+    "temporal_barabasi_albert",
+    "contact_bursts",
+    "temporal_snap_analogue",
+    "WindowedKCoreEngine",
+    "WindowStep",
+    "CoreCheckpointRing",
+    "ReplayRecord",
+    "ReplayTrajectory",
+    "replay",
+    "check_step",
+]

@@ -1,0 +1,341 @@
+"""Temporal subsystem: event-log format + IO, window semantics (hypothesis
+property: k window advances == one explicit EdgeBatch), the replay driver,
+as-of serving, and the 10k-vertex acceptance replay in all frontier modes."""
+
+import numpy as np
+import pytest
+
+from repro.core import bz_core_numbers
+from repro.graph import generators as gen
+from repro.streaming import (EdgeBatch, KCoreServer, Request,
+                             StreamingConfig, StreamingKCoreEngine)
+from repro.temporal import (ADD, REMOVE, CoreCheckpointRing, EventLog,
+                            WindowedKCoreEngine, contact_bursts,
+                            load_event_log, parse_event_text, replay,
+                            temporal_barabasi_albert,
+                            temporal_snap_analogue)
+
+
+# ---------------------------------------------------------------------- #
+# Event log format
+# ---------------------------------------------------------------------- #
+
+def test_event_log_datacleanse_and_canonical():
+    log = EventLog.make(time=[0.0, 1.0, 2.0, 3.0],
+                        u=[5, 2, 3, 1], v=[1, 2, 0, 5],
+                        kind=[1, 1, 1, -1], n=6)
+    # self-loop (2,2) dropped; endpoints canonicalized to (min, max)
+    assert len(log) == 3
+    assert log.u.tolist() == [1, 0, 1]
+    assert log.v.tolist() == [5, 3, 5]
+    assert log.num_adds == 2
+    ev = log[2]
+    assert (ev.t, ev.u, ev.v, ev.is_add) == (3.0, 1, 5, False)
+
+
+def test_event_log_rejects_bad_input():
+    with pytest.raises(ValueError):        # non-monotone time
+        EventLog.make([1.0, 0.5], [0, 1], [1, 2], [1, 1])
+    with pytest.raises(ValueError):        # bad kind
+        EventLog.make([0.0], [0], [1], [2])
+    with pytest.raises(ValueError):        # id outside universe
+        EventLog.make([0.0], [0], [9], [1], n=4)
+    with pytest.raises(ValueError):        # negative id
+        EventLog.make([0.0], [-1], [1], [1])
+
+
+def test_edges_between_last_event_wins():
+    # duplicate add/remove of one edge inside a range + re-insertion
+    log = EventLog.make(
+        time=[0, 1, 2, 3, 4, 5],
+        u=[0, 0, 0, 1, 0, 1],
+        v=[1, 1, 1, 2, 1, 2],
+        kind=[ADD, REMOVE, ADD, ADD, REMOVE, REMOVE], n=3)
+    assert log.edges_between(0, 4).tolist() == [[0, 1], [1, 2]]
+    assert log.edges_between(0, 5).tolist() == [[1, 2]]   # (0,1) removed
+    assert log.edges_between(0, 6).tolist() == []
+    assert log.edges_between(2, 4).tolist() == [[0, 1], [1, 2]]
+    # a range starting at a remove: the edge is absent there
+    assert log.edges_between(1, 2).tolist() == []
+    g = log.graph_between(0, 4)
+    assert g.n == 3 and g.m == 2
+
+
+def test_text_and_npz_round_trip(tmp_path):
+    log = temporal_barabasi_albert(40, 2, seed=3, remove_frac=0.3)
+    txt = parse_event_text(log.to_text(), n=log.n)
+    assert len(txt) == len(log) and txt.n == log.n
+    assert (txt.u == log.u).all() and (txt.kind == log.kind).all()
+    assert np.allclose(txt.time, log.time)
+
+    p = tmp_path / "log.npz"
+    log.save_npz(str(p))
+    npz = load_event_log(str(p))
+    assert len(npz) == len(log) and npz.n == log.n
+    assert (npz.u == log.u).all() and (npz.v == log.v).all()
+    assert (npz.kind == log.kind).all() and (npz.time == log.time).all()
+
+    # kind column optional in text: plain timestamped edge list = all adds
+    plain = parse_event_text("0.5 0 1\n1.5 1 2\n# c\n", n=3)
+    assert plain.num_adds == 2
+    # an unrecognized kind token must be rejected, not silently read as add
+    with pytest.raises(ValueError):
+        parse_event_text("0.5 0 1 r\n", n=3)
+
+
+def test_generators_are_valid_logs():
+    for log in (temporal_barabasi_albert(60, 3, seed=1, remove_frac=0.2),
+                contact_bursts(50, n_bursts=8, seed=1),
+                temporal_snap_analogue("FC", scale=0.02, seed=1,
+                                       remove_frac=0.2)):
+        assert len(log) > 0
+        assert (np.diff(log.time) >= 0).all()
+        assert (log.u < log.v).all()
+        assert int(log.v.max()) < log.n
+        assert np.isin(log.kind, (ADD, REMOVE)).all()
+        assert log.num_adds > 0
+    # contact bursts tear every contact down again
+    clog = contact_bursts(50, n_bursts=8, seed=1)
+    assert (clog.kind == REMOVE).sum() > 0
+    assert len(clog.edges_between(0, len(clog))) == 0
+
+
+# ---------------------------------------------------------------------- #
+# Window semantics: k advances == one explicit EdgeBatch
+# (seeded spot-check here; the hypothesis sweep over random event logs
+# lives in test_temporal_property.py)
+# ---------------------------------------------------------------------- #
+
+def _random_log(rng, n, n_events):
+    u = rng.integers(0, n, size=n_events)
+    v = rng.integers(0, n, size=n_events)
+    kind = rng.choice([1, -1], size=n_events)
+    time = np.cumsum(rng.integers(0, 4, size=n_events).astype(np.float64))
+    return EventLog.make(time, u, v, kind, n=n)
+
+
+def check_window_advance_equals_explicit_batch(log, window, stride, j, k):
+    """After j warm-up advances, advancing k more strides must equal
+    (a) one advance(k) call and (b) applying the equivalent explicit
+    EdgeBatch to a StreamingKCoreEngine directly — same graph, same
+    cores, and both exactly the BZ cores of the window graph."""
+    wa = WindowedKCoreEngine(log, window, stride)
+    wb = WindowedKCoreEngine(log, window, stride)
+    for _ in range(j):
+        wa.advance()
+        wb.advance()
+
+    # the direct path starts from the mid-point window graph
+    mid_graph = wa.window_graph()
+    direct = StreamingKCoreEngine(mid_graph)
+    batch, _ = wa.peek_batch(k)
+
+    for _ in range(k):
+        wa.advance()               # k single advances
+    wb.advance(k)                  # one k-stride advance
+    res = direct.apply_batch(batch)    # one explicit EdgeBatch
+
+    ga, gb, gd = wa.engine.graph, wb.engine.graph, direct.graph
+    assert ga.m == gb.m == gd.m
+    assert (ga.src == gb.src).all() and (ga.src == gd.src).all()
+    assert (ga.dst == gb.dst).all() and (ga.dst == gd.dst).all()
+    assert (wa.core == wb.core).all()
+    assert (wa.core == res.core).all()
+    # and the maintained edge set matches the declarative window semantics
+    lo, hi = wa.bounds
+    assert (wa.window_edges == log.edges_between(lo, hi)).all()
+    assert (wa.core == bz_core_numbers(wa.window_graph())).all()
+
+
+def test_window_advance_equals_explicit_batch_seeded():
+    rng = np.random.default_rng(11)
+    for _ in range(12):
+        log = _random_log(rng, int(rng.integers(3, 11)),
+                          int(rng.integers(1, 51)))
+        check_window_advance_equals_explicit_batch(
+            log, window=int(rng.integers(1, 13)),
+            stride=int(rng.integers(1, 7)),
+            j=int(rng.integers(0, 4)), k=int(rng.integers(1, 5)))
+
+
+def test_count_window_rejects_fractional_stride():
+    """A count-mode stride < 1 would truncate to 0 and never advance —
+    must be rejected up front, not loop forever (fractional strides are
+    legal in time mode, where they are real time spans)."""
+    log = _random_log(np.random.default_rng(0), 5, 20)
+    with pytest.raises(ValueError):
+        WindowedKCoreEngine(log, 10, 0.5)
+    with pytest.raises(ValueError):
+        WindowedKCoreEngine(log, 0.5, 2)
+    # floats >= 1 are fine (the CLI passes floats): truncated to events
+    weng = WindowedKCoreEngine(log, 10.0, 2.9)
+    assert (weng.window, weng.stride) == (10, 2)
+    with pytest.raises(ValueError):
+        WindowedKCoreEngine(log, 10, -1)
+    with pytest.raises(ValueError):
+        WindowedKCoreEngine(log, 10, 1, by="nope")
+
+
+def test_time_window_matches_bz_seeded():
+    rng = np.random.default_rng(12)
+    for _ in range(6):
+        log = _random_log(rng, int(rng.integers(3, 11)),
+                          int(rng.integers(1, 51)))
+        weng = WindowedKCoreEngine(log, window=float(rng.uniform(0.5, 8)),
+                                   stride=float(rng.uniform(0.25, 4)),
+                                   by="time")
+        steps = 0
+        while not weng.done and steps < 12:
+            ws = weng.advance()
+            lo, hi = weng.bounds
+            assert (ws.lo, ws.hi) == (lo, hi)
+            assert (weng.window_edges == log.edges_between(lo, hi)).all()
+            assert (ws.core == bz_core_numbers(weng.window_graph())).all()
+            steps += 1
+
+
+# ---------------------------------------------------------------------- #
+# Replay driver + CSR health surfacing
+# ---------------------------------------------------------------------- #
+
+def test_replay_trajectory_records_and_oracle():
+    log = temporal_barabasi_albert(120, 3, seed=0, remove_frac=0.15)
+    traj = replay(log, window=150, stride=60, oracle_every=2, track=4)
+    assert len(traj.records) > 2
+    assert traj.core_series.shape == (len(traj.records), traj.tracked.size)
+    checked = [r.oracle_ok for r in traj.records]
+    assert checked[0] is True                  # step 0 always checked
+    assert checked[-1] is True                 # final step always checked
+    assert any(ok is None for ok in checked)   # but not every step
+    s = traj.summary()
+    assert s["steps"] == len(traj.records)
+    assert s["total_messages"] == traj.series("messages").sum()
+    # core evolution is actually recorded: max core grows from 0
+    assert traj.records[0].core_max <= s["max_core_seen"]
+    # window deltas happened in both directions
+    assert traj.series("inserted").sum() > 0
+    assert traj.series("deleted").sum() > 0
+
+
+def test_batch_result_exposes_csr_health():
+    g = gen.barabasi_albert(80, 3, seed=0)
+    eng = StreamingKCoreEngine(g, StreamingConfig(slack=0.0, min_slack=1))
+    edges = np.stack([g.src[g.src < g.dst], g.dst[g.src < g.dst]], axis=1)
+    res = eng.apply_batch(EdgeBatch.make(delete=edges[:20]))
+    assert res.csr_dead_frac > 0               # deletions leave holes
+    assert 0 < res.csr_occupancy <= 1
+    assert res.csr_compactions == eng.csr.compactions
+    # hammer one row so a compaction must fire and the counter moves
+    res2 = eng.apply_batch(EdgeBatch.make(
+        insert=[(0, t) for t in range(1, 41)]))
+    assert res2.csr_compactions > res.csr_compactions
+    assert res2.csr_dead_frac <= res.csr_dead_frac  # compaction drops holes
+
+
+# ---------------------------------------------------------------------- #
+# As-of serving
+# ---------------------------------------------------------------------- #
+
+def test_checkpoint_ring_asof_and_eviction():
+    ring = CoreCheckpointRing(capacity=3)
+    with pytest.raises(KeyError):
+        ring.asof(0.0)
+    for t in (1.0, 2.0, 3.0, 4.0):             # 1.0 evicted by capacity
+        ring.push(t, np.full(4, int(t)))
+    assert ring.times.tolist() == [2.0, 3.0, 4.0]
+    bt, core = ring.asof(3.7)
+    assert bt == 3.0 and (core == 3).all()
+    assert ring.asof(4.0)[0] == 4.0            # boundary hit is inclusive
+    assert ring.asof(99.0)[0] == 4.0
+    with pytest.raises(KeyError):
+        ring.asof(1.5)                          # predates retained window
+    with pytest.raises(ValueError):
+        ring.push(2.0, np.zeros(4))             # time must not go backwards
+    # snapshots are read-only: retained history cannot be corrupted
+    # through the reference asof hands out
+    with pytest.raises(ValueError):
+        core[0] = 99
+
+
+def test_server_windowed_replay_and_asof_queries():
+    log = temporal_snap_analogue("FC", scale=0.03, seed=0, remove_frac=0.2)
+    weng = WindowedKCoreEngine(log, window=300, stride=120)
+    srv = KCoreServer(windowed=weng, asof_capacity=4)
+    snaps = []
+    for _ in range(5):
+        ws = srv.advance_window()
+        snaps.append((ws.t_hi, ws.result.core.copy()))
+    # exact at the head, and each retained boundary replays its snapshot
+    assert (srv.core == bz_core_numbers(weng.window_graph())).all()
+    assert len(srv.asof_ring) == 4              # capacity evicted snap 0
+    for t, core in snaps[1:]:
+        bt, got = srv.core_asof(t)
+        assert bt == t and (got == core).all()
+    # as-of BETWEEN boundaries answers from the earlier one
+    t_mid = 0.5 * (snaps[2][0] + snaps[3][0])
+    bt, got = srv.core_asof(t_mid, vertices=[0, 1, 2])
+    assert bt == snaps[2][0] and (got == snaps[2][1][:3]).all()
+    with pytest.raises(KeyError):
+        srv.core_asof(snaps[0][0])              # evicted
+    # the Request op round-trips through serve()
+    out = srv.serve([Request(op="core_asof", t=snaps[3][0],
+                             vertices=np.arange(5))])
+    assert out[0].payload[0] == snaps[3][0]
+    assert (out[0].payload[1] == snaps[3][1][:5]).all()
+    assert srv.stats()["asof_boundaries"] == 4
+    with pytest.raises(ValueError):             # static server: no window
+        KCoreServer(gen.cycle(8)).advance_window()
+    with pytest.raises(ValueError):             # exactly one of g/windowed
+        KCoreServer(gen.cycle(8), windowed=weng)
+    with pytest.raises(ValueError):             # engine knobs belong to the
+        KCoreServer(windowed=weng,              # WindowedKCoreEngine
+                    config=StreamingConfig(frontier="compact"))
+    # direct updates would desync the window's edge-set bookkeeping
+    with pytest.raises(ValueError):
+        srv.update(EdgeBatch.make(insert=[(0, 1)]))
+    with pytest.raises(ValueError):
+        srv.serve([Request(op="update",
+                           batch=EdgeBatch.make(insert=[(0, 1)]))])
+
+
+# ---------------------------------------------------------------------- #
+# Acceptance: 10k-vertex temporal SNAP analogue, all frontier modes
+# ---------------------------------------------------------------------- #
+
+def test_windowed_replay_10k_snap_analogue_all_modes():
+    """ISSUE 3 acceptance: windowed replay over a 10k-vertex temporal SNAP
+    analogue maintains exact core numbers at every window boundary in
+    dense, compact, and sharded frontier modes — BZ-verified on the dense
+    leg, and the other modes must match its cores AND per-round message
+    bills exactly."""
+    entry = gen.SNAP_BY_ABBREV["EEN"]
+    log = temporal_snap_analogue("EEN", scale=10_000 / entry.n, seed=0,
+                                 remove_frac=0.15)
+    assert log.n >= 10_000
+    stride = len(log) // 5
+    window = 2 * stride
+
+    engines = {mode: WindowedKCoreEngine(log, window, stride,
+                                         config=StreamingConfig(
+                                             frontier=mode))
+               for mode in ("dense", "compact", "sharded")}
+    steps = 0
+    while not engines["dense"].done and steps < 4:
+        ws = {mode: e.advance() for mode, e in engines.items()}
+        ref = ws["dense"]
+        # sliding (not just growing) windows must be exercised
+        wg = engines["dense"].window_graph()
+        assert (ref.result.core == bz_core_numbers(wg)).all(), (
+            f"step {steps}: dense cores diverged from the BZ oracle")
+        for mode in ("compact", "sharded"):
+            got = ws[mode]
+            assert (got.result.core == ref.result.core).all(), (
+                f"step {steps}: {mode} cores diverged from dense")
+            assert (got.result.stats.messages_per_round
+                    == ref.result.stats.messages_per_round).all(), (
+                f"step {steps}: {mode} message bill diverged from dense")
+        steps += 1
+    assert steps == 4
+    # the tail expired events: windows actually slid
+    lo, hi = engines["dense"].bounds
+    assert lo > 0

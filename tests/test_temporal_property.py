@@ -1,0 +1,61 @@
+"""Hypothesis property tests for the sliding-window semantics (ISSUE 3):
+advancing a window by k steps must yield exactly the same core numbers and
+graph as applying the equivalent explicit EdgeBatch to a
+StreamingKCoreEngine directly — over random event logs where duplicate
+add/remove of the same edge within a window and re-insertion after expiry
+are the common case."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see "
+                    "requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bz_core_numbers
+from repro.temporal import EventLog, WindowedKCoreEngine
+# tests/ is not a package; pytest puts it on sys.path (prepend import mode)
+from test_temporal import check_window_advance_equals_explicit_batch
+
+
+@st.composite
+def random_logs(draw):
+    """Small vertex pool + many events => duplicate add/remove of the same
+    edge within a window and re-insertion after expiry are the common case,
+    not the corner case. Zero inter-arrival gaps produce equal timestamps
+    (same-instant events must still apply in log order)."""
+    n = draw(st.integers(3, 10))
+    n_events = draw(st.integers(1, 50))
+    u = draw(st.lists(st.integers(0, n - 1), min_size=n_events,
+                      max_size=n_events))
+    v = draw(st.lists(st.integers(0, n - 1), min_size=n_events,
+                      max_size=n_events))
+    kind = draw(st.lists(st.sampled_from([1, -1]), min_size=n_events,
+                         max_size=n_events))
+    dts = draw(st.lists(st.integers(0, 3), min_size=n_events,
+                        max_size=n_events))
+    time = np.cumsum(np.asarray(dts, np.float64))
+    return EventLog.make(time, u, v, kind, n=n)
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_logs(), st.integers(1, 12), st.integers(1, 6),
+       st.integers(0, 3), st.integers(1, 4))
+def test_window_advance_equals_explicit_batch(log, window, stride, j, k):
+    check_window_advance_equals_explicit_batch(log, window, stride, j, k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_logs(), st.floats(0.5, 8.0), st.floats(0.25, 4.0))
+def test_time_window_matches_bz(log, window, stride):
+    """Time-based windows: exact BZ cores at every boundary, and the
+    engine's edge set always equals edges_between of the index bounds."""
+    weng = WindowedKCoreEngine(log, window, stride, by="time")
+    steps = 0
+    while not weng.done and steps < 12:
+        ws = weng.advance()
+        lo, hi = weng.bounds
+        assert (ws.lo, ws.hi) == (lo, hi)
+        assert (weng.window_edges == log.edges_between(lo, hi)).all()
+        assert (ws.core == bz_core_numbers(weng.window_graph())).all()
+        steps += 1
