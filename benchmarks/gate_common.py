@@ -51,6 +51,13 @@ def gate_main(*, run_records, settings, summarize, baseline, default_out,
     if args.write_baseline:
         ratios = {k: v["mean_ratio"] for k, v in summary.items()}
         base = {"settings": settings(), "mean_ratio": ratios}
+        # informational only (not gated): the wall/compile telemetry the
+        # ratios were recorded alongside, so a baseline refresh documents
+        # the perf state it locked in
+        for key in ("mean_ms_per_round", "recompiles"):
+            vals = {k: v[key] for k, v in summary.items() if key in v}
+            if vals:
+                base[f"info_{key}"] = vals
         pathlib.Path(args.baseline).write_text(json.dumps(base, indent=2))
         print(f"wrote baseline {args.baseline}")
         return 0

@@ -48,8 +48,8 @@ BATCHES = int(os.environ.get("REPRO_STREAM_BENCH_BATCHES", "5"))
 COLUMNS = ("graph", "n", "m", "churn", "batch", "inserted", "deleted",
            "inc_messages", "scratch_messages", "ratio", "inc_rounds",
            "scratch_rounds", "region", "mode", "patch_ms", "rebuild_ms",
-           "compactions", "dead_frac", "occupancy", "sharded_ok",
-           "oracle_ok")
+           "recompiles", "compactions", "dead_frac", "occupancy",
+           "sharded_ok", "oracle_ok")
 
 
 def settings() -> dict:
@@ -110,6 +110,9 @@ def run_records() -> list[dict]:
                     "mode": res.mode,
                     "patch_ms": round(res.patch_s * 1e3, 3),
                     "rebuild_ms": round(rebuild_s * 1e3, 3),
+                    # jit-recompile telemetry (dense-side engine; 0 = all
+                    # programs were cache hits this batch)
+                    "recompiles": res.recompiles,
                     # PatchableCSR health — compaction behavior over the
                     # stream (cumulative count, fragmentation, slack usage)
                     "compactions": res.csr_compactions,

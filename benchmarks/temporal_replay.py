@@ -5,11 +5,17 @@ incremental engine and reports, per window advance: the message bill vs a
 from-scratch decomposition of the same window graph, re-convergence
 rounds, CSR patch health (compactions / fragmentation / slack occupancy),
 and host-side wall cost: ``patch_ms`` (CSR patching), ``step_ms`` (the
-whole advance), and ``ms_per_round`` = step_ms / rounds — an UPPER BOUND
-on per-round host overhead (it also amortizes the window edge-set diff
-and the patch over the rounds), sizing the ROADMAP device-resident
-while_loop round-fusion item. Every step is BZ-oracle verified, so the
-ratio column is only meaningful because the windowed cores are exact.
+whole advance), ``ms_per_round`` = step_ms / rounds — an UPPER BOUND on
+per-round overhead (it also amortizes the window edge-set diff and the
+patch over the rounds) — and ``recompiles``, the fresh XLA compilations
+each step caused (repro.core.jit_telemetry), which makes the fused path's
+shape-stability claim measurable: over a whole replay the recompile total
+must stay O(log), not O(steps). The replay runs the ``fused`` frontier
+(one device-resident while_loop per advance — override with
+REPRO_TEMPORAL_BENCH_FRONTIER to compare modes); message bills are
+mode-invariant, so the gated ratios are comparable across frontiers.
+Every step is BZ-oracle verified, so the ratio column is only meaningful
+because the windowed cores are exact.
 
 Traces (>= 3 regimes):
 
@@ -24,8 +30,9 @@ regression gate against ``benchmarks/temporal_baseline.json`` and writes
 the full structured output as ``BENCH_temporal.json``.
 
 Environment knobs (for CI smoke):
-  REPRO_TEMPORAL_BENCH_N       target vertex count       (default 10000)
-  REPRO_TEMPORAL_BENCH_STEPS   window advances per trace (default 8)
+  REPRO_TEMPORAL_BENCH_N        target vertex count       (default 10000)
+  REPRO_TEMPORAL_BENCH_STEPS    window advances per trace (default 8)
+  REPRO_TEMPORAL_BENCH_FRONTIER engine frontier mode      (default fused)
 """
 
 from __future__ import annotations
@@ -37,12 +44,14 @@ import numpy as np
 from benchmarks.common import csv_row
 from repro.core import kcore_decompose
 from repro.graph import generators as gen
+from repro.streaming import StreamingConfig
 from repro.temporal import (contact_bursts, replay,
                             temporal_barabasi_albert,
                             temporal_snap_analogue)
 
 TARGET_N = int(os.environ.get("REPRO_TEMPORAL_BENCH_N", "10000"))
 STEPS = int(os.environ.get("REPRO_TEMPORAL_BENCH_STEPS", "8"))
+FRONTIER = os.environ.get("REPRO_TEMPORAL_BENCH_FRONTIER", "fused")
 
 # Trace geometry — recorded in settings() so the gate's --require-match
 # catches workload edits, not just env-knob changes (a changed workload
@@ -55,8 +64,8 @@ BA_REMOVE_FRAC = 0.1
 COLUMNS = ("trace", "n", "events", "window", "stride", "step", "m",
            "inserted", "deleted", "messages", "scratch_messages", "ratio",
            "rounds", "frontier_peak", "mode", "patch_ms", "step_ms",
-           "ms_per_round", "compactions", "dead_frac", "occupancy",
-           "core_max", "oracle_ok")
+           "ms_per_round", "recompiles", "compactions", "dead_frac",
+           "occupancy", "core_max", "oracle_ok")
 
 
 def traces() -> list[tuple[str, object, float, float, str]]:
@@ -85,7 +94,7 @@ def traces() -> list[tuple[str, object, float, float, str]]:
 
 
 def settings() -> dict:
-    return {"target_n": TARGET_N, "steps": STEPS,
+    return {"target_n": TARGET_N, "steps": STEPS, "frontier": FRONTIER,
             "traces": list(TRACE_NAMES),
             "window_strides": WINDOW_STRIDES,
             "snap_remove_frac": SNAP_REMOVE_FRAC,
@@ -97,6 +106,7 @@ def run_records() -> list[dict]:
     records = []
     for name, log, window, stride, by in traces():
         traj = replay(log, window, stride, by=by, oracle_every=1,
+                      config=StreamingConfig(frontier=FRONTIER),
                       max_steps=STEPS)
         # from-scratch message bill of each window graph, for the ratio
         for rec in traj.records:
@@ -116,6 +126,7 @@ def run_records() -> list[dict]:
                 "mode": rec.mode, "patch_ms": rec.patch_ms,
                 "step_ms": rec.step_ms,
                 "ms_per_round": round(rec.step_ms / max(rec.rounds, 1), 3),
+                "recompiles": rec.recompiles,
                 "compactions": rec.csr_compactions,
                 "dead_frac": rec.csr_dead_frac,
                 "occupancy": rec.csr_occupancy,
@@ -138,6 +149,7 @@ def summarize(records: list[dict]) -> dict:
                                               for r in rs])), 3),
         "mean_ms_per_round": round(float(np.mean([r["ms_per_round"]
                                                   for r in rs])), 3),
+        "recompiles": int(np.sum([r["recompiles"] for r in rs])),
         "compactions": int(rs[-1]["compactions"]),
     } for trace, rs in out.items()}
 
@@ -152,6 +164,7 @@ def run() -> list[str]:
                     messages=s["mean_messages"],
                     patch_ms=s["mean_patch_ms"],
                     ms_per_round=s["mean_ms_per_round"],
+                    recompiles=s["recompiles"],
                     compactions=s["compactions"])
         rows.append(csv_row(*(mean[c] for c in COLUMNS)))
     return rows

@@ -3,9 +3,12 @@ composable JAX module, with exact message accounting, termination-detection
 models, and a simulated-network cost model."""
 
 from repro.core.bz import bz_core_numbers, max_core
+from repro.core.jit_telemetry import compile_count
 from repro.core.kcore import (
     KCoreConfig,
     KCoreResult,
+    fused_convergence,
+    fused_round_stats,
     kcore_decompose,
     kcore_decompose_sharded,
     make_sharded_superstep,
@@ -16,8 +19,11 @@ from repro.core.messages import MessageStats, heartbeat_overhead, work_bound
 __all__ = [
     "bz_core_numbers",
     "max_core",
+    "compile_count",
     "KCoreConfig",
     "KCoreResult",
+    "fused_convergence",
+    "fused_round_stats",
     "kcore_decompose",
     "kcore_decompose_sharded",
     "make_sharded_superstep",

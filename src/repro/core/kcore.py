@@ -100,6 +100,20 @@ def _hindex_by_bsearch(est, est_dst_masked, src, n, n_iters):
     return lo
 
 
+def _masked_round(est, src, dst, arc_mask, active, n, n_iters):
+    """Traceable body of the masked Jacobi superstep (shared by the jitted
+    per-round entry point and the fused while_loop)."""
+    est_dst = jnp.where(arc_mask, est[dst], 0)
+    h = _hindex_by_bsearch(est, est_dst, src, n, n_iters)
+    new_est = jnp.where(active, h, est)
+    changed = new_est < est
+    # who receives a message next round: u s.t. some neighbor v changed
+    recv = jax.ops.segment_sum(
+        (jnp.where(arc_mask, changed[dst], False)).astype(jnp.int32),
+        src, num_segments=n) > 0
+    return new_est, changed, recv
+
+
 @functools.partial(jax.jit, static_argnames=("n", "n_iters"))
 def masked_round_segment(est, src, dst, arc_mask, active, n, n_iters):
     """One frontier-masked Jacobi superstep. Returns (new_est, changed, recv).
@@ -112,21 +126,149 @@ def masked_round_segment(est, src, dst, arc_mask, active, n, n_iters):
     is exact for the monotone locality operator (an inactive vertex's inputs
     are unchanged, so recomputing it would be a no-op).
     """
-    est_dst = jnp.where(arc_mask, est[dst], 0)
-    h = _hindex_by_bsearch(est, est_dst, src, n, n_iters)
-    new_est = jnp.where(active, h, est)
-    changed = new_est < est
-    # who receives a message next round: u s.t. some neighbor v changed
-    recv = jax.ops.segment_sum(
-        (jnp.where(arc_mask, changed[dst], False)).astype(jnp.int32),
-        src, num_segments=n) > 0
-    return new_est, changed, recv
+    return _masked_round(est, src, dst, arc_mask, active, n, n_iters)
 
 
 def _round_segment(est, src, dst, arc_mask, n, n_iters):
     """One (unmasked) Jacobi superstep. Returns (new_est, changed, received)."""
     active = jnp.ones(est.shape, bool)
     return masked_round_segment(est, src, dst, arc_mask, active, n, n_iters)
+
+
+# ---------------------------------------------------------------------- #
+# Fused convergence — one device-resident while_loop per batch
+# ---------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("n", "n_iters", "max_rounds"))
+def fused_convergence(est, src, dst, arc_mask, active, deg,
+                      n, n_iters, max_rounds):
+    """Run masked Jacobi supersteps to the fixpoint in ONE ``lax.while_loop``.
+
+    The host round loop (kcore_decompose / the streaming engine's per-round
+    ``step``) pays a device round-trip of est/changed/recv per superstep —
+    at streaming batch sizes that host traffic, not the h-index math,
+    dominates wall-clock. Montresor et al. bound the number of rounds, so a
+    whole batch re-convergence is a bounded iteration that can live on
+    device: carry = (est, active, round_idx, stop, per-round stat buffers),
+    body = the same ``_masked_round`` superstep the host loop runs, cond =
+    frontier non-empty (and round cap not hit, and last round productive).
+
+    Per executed round r the body fills three ``(max_rounds,)`` int32
+    buffers — messages (Σ deg over changed vertices; < 2m < 2^31 per round
+    for every graph we target, accumulated to int64 on host), changed
+    count, and receiver count — from which the host reconstructs per-round
+    ``MessageStats`` EXACTLY equal to the host-loop modes' accounting
+    (see ``fused_round_stats``).
+
+    Returns ``(est', rounds, stopped, final_active, msgs_buf, changed_buf,
+    recv_buf)``: ``rounds`` counts every executed superstep including a
+    final unproductive one (host-loop convention), ``stopped`` is True iff
+    the loop exited on an unproductive round, ``final_active`` is the exit
+    frontier size (0 and/or ``stopped`` ⇒ converged).
+    """
+    def cond(carry):
+        _est, act, r, stop = carry[:4]
+        return (~stop) & (r < max_rounds) & act.any()
+
+    def body(carry):
+        est, act, r, _stop, mb, cb, rb = carry
+        new_est, changed, recv = _masked_round(est, src, dst, arc_mask,
+                                               act, n, n_iters)
+        any_ch = changed.any()
+        mb = mb.at[r].set(jnp.sum(jnp.where(changed, deg, 0),
+                                  dtype=jnp.int32))
+        cb = cb.at[r].set(jnp.sum(changed, dtype=jnp.int32))
+        rb = rb.at[r].set(jnp.sum(recv, dtype=jnp.int32))
+        return new_est, recv, r + 1, ~any_ch, mb, cb, rb
+
+    zeros = jnp.zeros(max_rounds, jnp.int32)
+    carry = (est, active, jnp.int32(0), jnp.bool_(False),
+             zeros, zeros, zeros)
+    est, act, r, stop, mb, cb, rb = lax.while_loop(cond, body, carry)
+    return est, r, stop, jnp.sum(act, dtype=jnp.int32), mb, cb, rb
+
+
+def fused_round_stats(rounds, stopped, final_active,
+                      msgs_buf, changed_buf, recv_buf):
+    """Host-side reconstruction of per-round accounting from fused buffers.
+
+    Returns ``(k, msgs, changed, recv, converged)``: ``k`` is the number of
+    PRODUCTIVE rounds (the prefix whose changed count is non-zero — once a
+    round changes nothing the loop stops, so productive rounds are always a
+    prefix) and the three ``(k,)`` int64 arrays are exactly what the
+    host-loop modes would have appended round by round.
+    """
+    rounds = int(rounds)
+    cb = np.asarray(changed_buf[:rounds], np.int64)
+    k = int((cb > 0).sum())
+    converged = bool(stopped) or int(final_active) == 0
+    return (k, np.asarray(msgs_buf[:k], np.int64), cb[:k],
+            np.asarray(recv_buf[:k], np.int64), converged)
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_sharded_convergence(mesh: jax.sharding.Mesh, axes: tuple,
+                               V: int, n_iters: int, max_rounds: int):
+    """Cached jitted fused convergence over a device mesh (streaming path).
+
+    The masked shard_map superstep of ``_masked_sharded_superstep`` nested
+    INSIDE the while_loop: the whole batch re-convergence is one shard_map
+    program, with per-round cross-device traffic only (one est all_gather,
+    one 1-bit changed all_gather, three scalar psums) — the host sees the
+    final estimate plus the filled stat buffers, same contract and same
+    exact accounting as ``fused_convergence``. Keyed on (mesh, axes, V,
+    n_iters, max_rounds) like its per-round sibling so stable shard shapes
+    reuse one compiled program across batches.
+
+    Returns ``prog(est, src, dst, arc_mask, deg, active) -> (est', rounds,
+    stopped, final_active, msgs_buf, changed_buf, recv_buf)`` with est'
+    sharded like the state and everything else replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution.compat import shard_map
+
+    def prog(est, src, dst, arc_mask, deg, active):
+        # shapes inside shard_map (per device): est (1, V), src (1, A), ...
+        src_l, dst_l, am_l, deg_l = src[0], dst[0], arc_mask[0], deg[0]
+
+        def cond(carry):
+            _est, act, r, stop = carry[:4]
+            return ((~stop) & (r < max_rounds)
+                    & (lax.psum(jnp.sum(act, dtype=jnp.int32), axes) > 0))
+
+        def body(carry):
+            est_c, act_c, r, _stop, mb, cb, rb = carry
+            est_glob = lax.all_gather(est_c, axes, axis=0,
+                                      tiled=True).reshape(-1)
+            est_dst = jnp.where(am_l, est_glob[dst_l], 0)
+            h = _hindex_by_bsearch(est_c[0], est_dst, src_l, V, n_iters)
+            new_l = jnp.where(act_c[0], h, est_c[0])
+            changed_l = new_l < est_c[0]
+            msgs = lax.psum(jnp.sum(jnp.where(changed_l, deg_l, 0),
+                                    dtype=jnp.int32), axes)
+            ch_cnt = lax.psum(jnp.sum(changed_l, dtype=jnp.int32), axes)
+            ch_glob = lax.all_gather(changed_l[None], axes, axis=0,
+                                     tiled=True).reshape(-1)
+            recv_l = jax.ops.segment_sum(
+                jnp.where(am_l, ch_glob[dst_l], False).astype(jnp.int32),
+                src_l, num_segments=V) > 0
+            rb = rb.at[r].set(lax.psum(jnp.sum(recv_l, dtype=jnp.int32),
+                                       axes))
+            return (new_l[None], recv_l[None], r + 1, ch_cnt == 0,
+                    mb.at[r].set(msgs), cb.at[r].set(ch_cnt), rb)
+
+        zeros = jnp.zeros(max_rounds, jnp.int32)
+        carry = (est, active, jnp.int32(0), jnp.bool_(False),
+                 zeros, zeros, zeros)
+        est, act, r, stop, mb, cb, rb = lax.while_loop(cond, body, carry)
+        final = lax.psum(jnp.sum(act, dtype=jnp.int32), axes)
+        return est, r, stop, final, mb, cb, rb
+
+    spec_state = P(axes)
+    sharded = shard_map(prog, mesh=mesh, in_specs=(spec_state,) * 6,
+                        out_specs=(spec_state,) + (P(),) * 6)
+    return jax.jit(sharded)
 
 
 # ---------------------------------------------------------------------- #

@@ -1,0 +1,22 @@
+"""Shared shape-padding helpers.
+
+Every layer that feeds jit-compiled programs pads its arrays so XLA sees
+few distinct shapes: shard blocks round up to a multiple (``round_up``),
+and streaming/temporal arrays whose sizes drift per batch round up to
+powers of two (``next_pow2``) so a whole churn stream compiles O(log)
+distinct signatures instead of one per size. These two functions are THE
+padding policy — graph/structs, graph/partition, and streaming/engine all
+import from here rather than growing private copies.
+"""
+
+from __future__ import annotations
+
+
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` >= x (identity when mult <= 0)."""
+    return ((x + mult - 1) // mult) * mult if mult > 0 else x
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 1)."""
+    return 1 << max(int(x) - 1, 0).bit_length()

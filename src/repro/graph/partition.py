@@ -24,7 +24,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.graph.structs import Graph, _round_up
+from repro.graph.padding import next_pow2 as _next_pow2
+from repro.graph.padding import round_up as _round_up
+from repro.graph.structs import Graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,14 +46,10 @@ class ShardedGraph:
         return self.n_shards * self.verts_per_shard
 
 
-def _next_pow2(x: int) -> int:
-    return 1 << max(int(x) - 1, 0).bit_length()
-
-
 def shard_arc_arrays(n: int, src: np.ndarray, dst: np.ndarray,
                      arc_mask: np.ndarray, deg: np.ndarray, n_shards: int,
-                     arc_multiple: int = 8, pow2: bool = False
-                     ) -> ShardedGraph:
+                     arc_multiple: int = 8, pow2: bool = False,
+                     min_arcs_per_shard: int = 0) -> ShardedGraph:
     """Shard raw src-sorted arc arrays (the layout contract above).
 
     ``src`` must be non-decreasing but MAY contain dead slots (``arc_mask``
@@ -59,6 +57,9 @@ def shard_arc_arrays(n: int, src: np.ndarray, dst: np.ndarray,
     re-sorting because its row-major slot order is already src order. With
     ``pow2`` the per-shard vertex and arc blocks are padded to powers of two
     so jit sees O(log) distinct shapes over a whole update stream.
+    ``min_arcs_per_shard`` floors the padded arc block A — the streaming
+    engine passes its high-water A so per-batch degree fluctuations never
+    shrink the shape (shrinking would mint fresh jit signatures).
     """
     V = max(_round_up(n, n_shards) // n_shards, 1)
     if pow2:
@@ -71,6 +72,7 @@ def shard_arc_arrays(n: int, src: np.ndarray, dst: np.ndarray,
             arc_multiple)
     if pow2:
         A = _next_pow2(A)
+    A = max(A, int(min_arcs_per_shard))
     src_s = np.zeros((n_shards, A), np.int32)
     dst_s = np.zeros((n_shards, A), np.int32)
     mask_s = np.zeros((n_shards, A), bool)

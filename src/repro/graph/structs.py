@@ -21,6 +21,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.graph.padding import round_up as _round_up  # shared padding policy
+
 
 @dataclasses.dataclass(frozen=True)
 class Graph:
@@ -111,10 +113,6 @@ class PaddedGraph:
     dst: np.ndarray       # (num_arcs_pad,) int32
     deg: np.ndarray       # (n_pad,) int32, zeros in padding
     arc_mask: np.ndarray  # (num_arcs_pad,) bool — True for real arcs
-
-
-def _round_up(x: int, mult: int) -> int:
-    return ((x + mult - 1) // mult) * mult if mult > 0 else x
 
 
 def pad_graph_for_shards(g: Graph, n_shards: int) -> PaddedGraph:

@@ -61,7 +61,9 @@ def parse_args():
     ap.add_argument("--queries", type=int, default=100_000,
                     help="core-number lookups per tick")
     ap.add_argument("--frontier", default="dense",
-                    choices=["dense", "compact", "sharded", "auto"])
+                    choices=["dense", "compact", "sharded", "fused", "auto"],
+                    help="engine execution mode; fused = one device-"
+                         "resident while_loop per batch (mesh-aware)")
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="run mesh-native on an N-device ('data',) mesh; "
                          "forces N host devices when fewer exist (must be "

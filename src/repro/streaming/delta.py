@@ -180,12 +180,18 @@ class PatchableCSR:
 
     # ------------------------------------------------------------------ #
     def _alloc(self, n: int, src: np.ndarray, dst: np.ndarray,
-               deg: np.ndarray) -> None:
-        """(Re)build storage from src-sorted live arcs with fresh slack."""
+               deg: np.ndarray, reserve: np.ndarray | None = None) -> None:
+        """(Re)build storage from src-sorted live arcs with fresh slack.
+
+        ``reserve`` (n,) adds per-row slots on top of the slack — the
+        batch-aware compaction passes the incoming insert counts so one
+        rebuild is guaranteed to fit the whole batch."""
         deg = np.asarray(deg, np.int64)
         pad = np.maximum(np.ceil(self.slack * deg).astype(np.int64),
                          self.min_slack)
         cap = deg + pad
+        if reserve is not None:
+            cap = cap + np.asarray(reserve, np.int64)
         self.n = int(n)
         self.row_off = np.zeros(n + 1, np.int64)
         np.cumsum(cap, out=self.row_off[1:])
@@ -232,15 +238,18 @@ class PatchableCSR:
         return self._find_slot(u, v) >= 0
 
     # ------------------------------------------------------------------ #
-    def _compact(self, n: int | None = None) -> None:
-        """Rebuild with fresh slack (and optionally a grown vertex set)."""
+    def _compact(self, n: int | None = None,
+                 reserve: np.ndarray | None = None) -> None:
+        """Rebuild with fresh slack (and optionally a grown vertex set
+        and/or per-row reserved slots for an incoming batch)."""
         n = self.n if n is None else int(n)
         keep = self.live
         src = self.src[keep].astype(np.int64)
         dst = self.dst[keep].astype(np.int64)
         # rows stay contiguous under filtering, so src stays sorted
         deg = np.bincount(src, minlength=n)
-        self._alloc(n, src.astype(np.int32), dst.astype(np.int32), deg)
+        self._alloc(n, src.astype(np.int32), dst.astype(np.int32), deg,
+                    reserve=reserve)
         self.compactions += 1
 
     # ------------------------------------------------------------------ #
@@ -278,6 +287,21 @@ class PatchableCSR:
             self.m -= 1
             self.dead += 2
             deleted.append((u, v))
+
+        # batch-aware growth policy: if ANY row lacks free slots for its
+        # incoming inserts, compact ONCE with the batch's per-row need
+        # reserved, instead of compacting per overflowing insert (a windowed
+        # replay at full scale was thrashing ~90 O(m) compactions per batch
+        # through the hub rows). need over-counts already-present edges —
+        # over-reserving is just slack, never a correctness issue.
+        if ins.size:
+            need = np.bincount(ins.reshape(-1), minlength=self.n)
+            row_cap = np.diff(self.row_off)
+            free = row_cap - np.bincount(self.src[self.live],
+                                         minlength=self.n)
+            if (need > free).any():
+                self._compact(reserve=need)
+                compacted = True
 
         inserted = []
         for u, v in ins.tolist():

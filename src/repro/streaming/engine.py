@@ -15,9 +15,13 @@ Seeding rules (all sound, proofs in the docstrings below):
     from a tight upper-bound vector computed by a batch generalization of
     the single-edge subcore theorem: +1 passes over level-set components
     anchored at inserted edges, pruned by a support peel
-    (see ``_insertion_upper_bound``). The passes run as vectorized jax
-    segment ops (bottleneck-path propagation + synchronous peel), so seed
-    cost no longer scales with host-side Python.
+    (see ``_insertion_upper_bound``). The passes run as ONE jitted device
+    program (``_ub_converge``), so seed cost is a single dispatch;
+  * BULK batches (insert count >= ``bulk_seed_frac`` of the post-batch
+    edges) skip the tight bound and seed straight from degrees — sound by
+    definition, and cheaper in wall time than a tight bound whose pass
+    count grows with the core raise (the fused loop absorbs the extra
+    rounds on device). Small-churn batches never take this path.
 
 The graph itself lives in a slack-padded in-place CSR (streaming/delta.py
 ``PatchableCSR``): a batch patches arc slots instead of rebuilding the
@@ -31,7 +35,7 @@ link handshake/teardown); every later round charges deg(u) per vertex whose
 estimate decreased. This makes "messages per batch" directly comparable to
 the from-scratch total the paper reports.
 
-Three frontier execution modes (plus ``auto``, which picks per batch):
+Four frontier execution modes (plus ``auto``, which picks per batch):
 
   * ``dense``   — full-width jitted masked superstep (core.masked_round_segment):
     one XLA program for the whole stream, frontier as a boolean mask;
@@ -43,6 +47,15 @@ Three frontier execution modes (plus ``auto``, which picks per batch):
     sharded by contiguous range, one est all_gather plus one 1-bit changed
     all_gather per round. The in-place CSR's slot arrays are already
     src-sorted, so sharding a churned graph needs no sort.
+  * ``fused``   — the ENTIRE batch re-convergence runs as one device-resident
+    ``lax.while_loop`` (core.fused_convergence): no per-round host
+    round-trips; the host gets back only the final estimate plus per-round
+    stat buffers from which exact MessageStats are reconstructed. With a
+    mesh attached the while_loop nests the masked shard_map superstep
+    (``fused_sharded``). All fused-program shapes are high-water-marked
+    (CSR capacity, shard arc blocks, h-index search depth) so a whole
+    windowed replay compiles O(log) distinct jit signatures — measured,
+    not asserted, via repro.core.jit_telemetry (``BatchResult.recompiles``).
 
 All modes produce identical estimates and identical message counts.
 """
@@ -59,17 +72,21 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.kcore import (KCoreConfig, _bs_iters, _hindex_by_bsearch,
-                              _receivers_arrays, kcore_decompose,
+from repro.core.jit_telemetry import compile_count
+from repro.core.kcore import (KCoreConfig, _bs_iters,
+                              _fused_sharded_convergence, _hindex_by_bsearch,
+                              _receivers_arrays, fused_convergence,
+                              fused_round_stats, kcore_decompose,
                               kcore_decompose_sharded,
                               make_sharded_superstep, masked_round_segment)
 from repro.core.messages import MessageStats
-from repro.graph.partition import _next_pow2
+from repro.graph.padding import next_pow2 as _next_pow2
+from repro.graph.padding import round_up as _round_up
 from repro.graph.structs import Graph
 from repro.streaming.delta import ChurnDelta, DeltaResult, EdgeBatch, \
     PatchableCSR
 
-FRONTIER_MODES = ("dense", "compact", "sharded", "auto")
+FRONTIER_MODES = ("dense", "compact", "sharded", "fused", "auto")
 
 
 # ---------------------------------------------------------------------- #
@@ -81,12 +98,28 @@ class StreamingConfig:
     frontier: str = "dense"          # one of FRONTIER_MODES
     max_rounds: int | None = None    # None -> n + 1 per batch (worst case)
     # "auto" picks compact below this initial-frontier fraction, else
-    # sharded when a mesh is attached, else dense
+    # fused (the sharded-fused variant when a mesh is attached)
     compact_threshold: float = 0.02
     # in-place CSR knobs (see delta.PatchableCSR)
     slack: float = 0.3
     min_slack: int = 4
     compact_dead_frac: float = 0.25
+    # pre-seeds the padded live-arc shape (engine._padded_slots) so a
+    # stream that grows into a known load doesn't walk its jitted programs
+    # through every pow2 size on the way up (the windowed engine sets it
+    # from the expected window size); 0 = grow organically
+    min_arc_capacity: int = 0
+    # bulk-batch seeding policy: when a batch's effective insert count
+    # reaches this fraction of the POST-batch edge count, seed from plain
+    # degrees (always sound: deg >= core) instead of the subcore upper
+    # bound. The tight bound costs one +1 pass per unit of core raise —
+    # unbounded for bulk loads (a filling window raises cores by tens) —
+    # while the fused loop converges from degrees at a few hundred ms per
+    # round; for small churn (the streaming benchmark's 0.2-2%) the tight
+    # bound always wins and this never triggers. Trades seed-round
+    # messages for wall time on heavy batches ONLY; all frontier modes
+    # share the seed, so cross-mode bill equality is unaffected.
+    bulk_seed_frac: float = 0.25
 
 
 @dataclasses.dataclass
@@ -102,6 +135,9 @@ class BatchResult:
     seed_changed: int         # vertices that had to rebroadcast at seed time
     mode: str = "dense"       # execution mode this batch actually ran in
     patch_s: float = 0.0      # host seconds spent patching the CSR in place
+    # fresh XLA compilations this batch caused (process-wide; 0 = every
+    # jitted program was a cache hit — the shape-stability signal)
+    recompiles: int = 0
     # (whether the batch forced an O(m) CSR compaction: delta.compacted)
     # PatchableCSR health after the batch — long churn streams live or die
     # by compaction behavior, so it is first-class, not property-test-only:
@@ -118,8 +154,7 @@ class BatchResult:
 # Warm-start seeding
 # ---------------------------------------------------------------------- #
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def _ub_pass(U, cap, src, dst, live, ins_u, ins_v, ins_live, n):
+def _ub_pass_body(U, cap, src, dst, live, ins_u, ins_v, ins_live, n):
     """One vectorized +1 pass of the insertion upper bound (see below).
 
     All device-side segment ops; dead/padding arc slots carry live=False.
@@ -164,6 +199,32 @@ def _ub_pass(U, cap, src, dst, live, ins_u, ins_v, ins_live, n):
     return jnp.where(cand, U + 1, U), cand.any()
 
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def _ub_pass(U, cap, src, dst, live, ins_u, ins_v, ins_live, n):
+    """One jitted +1 pass (kept as the single-pass entry point; the engine
+    hot path runs ``_ub_converge`` instead)."""
+    return _ub_pass_body(U, cap, src, dst, live, ins_u, ins_v, ins_live, n)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _ub_converge(U, cap, src, dst, live, ins_u, ins_v, ins_live, n):
+    """ALL +1 passes of the insertion upper bound in one device program.
+
+    The pass loop used to live on host — one jitted ``_ub_pass`` dispatch
+    plus a blocking ``raised`` sync per pass, ~20 passes per heavy batch.
+    Fusing it into an outer ``lax.while_loop`` makes the whole seed
+    computation a single dispatch with no host round-trips; each pass is
+    the identical ``_ub_pass_body``, so the resulting U is unchanged
+    (property-tested against the union-find reference)."""
+    def pass_body(state):
+        U, _ = state
+        return _ub_pass_body(U, cap, src, dst, live, ins_u, ins_v,
+                             ins_live, n)
+
+    U, _ = lax.while_loop(lambda s: s[1], pass_body, (U, jnp.bool_(True)))
+    return U
+
+
 def _insertion_upper_bound_arrays(n: int, src, dst, live, deg,
                                   old_core_ext: np.ndarray,
                                   inserted: np.ndarray) -> np.ndarray:
@@ -189,11 +250,7 @@ def _insertion_upper_bound_arrays(n: int, src, dst, live, deg,
     src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
     live_j = jnp.asarray(live)
     iu, iv, il = jnp.asarray(ins_u), jnp.asarray(ins_v), jnp.asarray(ins_live)
-    while True:
-        U_j, raised = _ub_pass(U_j, cap_j, src_j, dst_j, live_j,
-                               iu, iv, il, n)
-        if not bool(raised):
-            break
+    U_j = _ub_converge(U_j, cap_j, src_j, dst_j, live_j, iu, iv, il, n)
     return np.asarray(U_j).astype(np.int64)
 
 
@@ -234,12 +291,14 @@ def _insertion_upper_bound(new_g: Graph, old_core_ext: np.ndarray,
     of every intermediate one, which only enlarges components (safe: over-
     approximating raises costs extra seed broadcasts, never correctness).
 
-    Each pass is one jitted ``_ub_pass`` (a max-min bottleneck propagation
-    replaces the host-side union-find sweep; a synchronous segment-sum peel
-    replaces the stack peel — both reach the same fixpoints, checked
-    against ``_insertion_upper_bound_unionfind`` in the tests). The number
-    of passes is bounded by the largest true core increase (1-2 for
-    realistic churn).
+    The passes run as ONE jitted device program (``_ub_converge``: an
+    outer while_loop over ``_ub_pass_body`` — a max-min bottleneck
+    propagation replaces the host-side union-find sweep; a synchronous
+    segment-sum peel replaces the stack peel — both reach the same
+    fixpoints, checked against ``_insertion_upper_bound_unionfind`` in the
+    tests). The number of passes is bounded by the largest true core
+    increase (1-2 for realistic churn; up to tens when a sliding window
+    first fills).
     """
     return _insertion_upper_bound_arrays(
         new_g.n, new_g.src, new_g.dst, np.ones(new_g.num_arcs, bool),
@@ -403,7 +462,14 @@ class StreamingKCoreEngine:
                                  compact_dead_frac=config.compact_dead_frac)
         self._graph_cache: Graph | None = g
         self._slots_cache: tuple | None = None
-        if mesh is not None and config.frontier in ("sharded", "auto"):
+        self._live_cache: tuple | None = None
+        # shape high-water marks (see _padded_slots / _run_fused): per-batch
+        # fluctuations must never SHRINK a jitted program's shape
+        self._arc_pad_hwm = _next_pow2(max(int(config.min_arc_capacity), 1))
+        self._shard_A_floor = 0
+        self._n_iters_hwm = 0
+        if mesh is not None and config.frontier in ("sharded", "fused",
+                                                    "auto"):
             # sharded init: same cores/messages as the single-device static
             # engine (tests/test_distributed.py), no host-side detour
             init = kcore_decompose_sharded(g, mesh, self.axis_names,
@@ -440,34 +506,58 @@ class StreamingKCoreEngine:
         """Edge count — O(1), no Graph materialization."""
         return self._csr.m
 
-    def _padded_slots(self) -> tuple:
-        """(src, dst, live) slot arrays padded to pow2 capacity, cached
-        until the next batch mutates the CSR. Shared by the seed pass and
-        the dense superstep so their jitted programs see O(log) distinct
-        arc shapes over a whole churn stream (compactions change the raw
-        capacity arbitrarily)."""
-        if self._slots_cache is None:
+    def _live_arrays(self) -> tuple:
+        """(src, dst) of the LIVE arcs only, still src-sorted (row-major
+        slot order survives boolean filtering), cached until the next batch
+        mutates the CSR. One O(capacity) extraction buys every downstream
+        device program a 2-4x smaller arc dimension than the slack+hole
+        padded slot arrays."""
+        if self._live_cache is None:
             csr = self._csr
-            C = csr.capacity
-            arc_pad = _next_pow2(max(C, 1))
+            self._live_cache = (csr.src[csr.live], csr.dst[csr.live])
+        return self._live_cache
+
+    def _padded_slots(self) -> tuple:
+        """(src, dst, mask) live arc arrays padded to a pow2 HIGH-WATER
+        arc count, cached until the next batch mutates the CSR. Shared by
+        the seed pass and the dense/fused supersteps so their jitted
+        programs see O(log) distinct arc shapes over a whole churn stream:
+        the live count moves both ways batch to batch, and re-crossing a
+        pow2 boundary would mint a fresh signature each time; the high-
+        water mark (pre-seeded by ``min_arc_capacity``) only grows."""
+        if self._slots_cache is None:
+            src_live, dst_live = self._live_arrays()
+            k = src_live.size
+            self._arc_pad_hwm = max(self._arc_pad_hwm,
+                                    _next_pow2(max(k, 1)))
+            arc_pad = self._arc_pad_hwm
             src_np = np.zeros(arc_pad, np.int32)
-            src_np[:C] = csr.src
+            src_np[:k] = src_live
             dst_np = np.zeros(arc_pad, np.int32)
-            dst_np[:C] = csr.dst
-            live_np = np.zeros(arc_pad, bool)
-            live_np[:C] = csr.live
-            self._slots_cache = (src_np, dst_np, live_np)
+            dst_np[:k] = dst_live
+            mask = np.zeros(arc_pad, bool)
+            mask[:k] = True
+            self._slots_cache = (src_np, dst_np, mask)
         return self._slots_cache
 
     # ------------------------------------------------------------------ #
     def _resolve_mode(self, n: int, active: np.ndarray) -> str:
+        """Config frontier -> the execution mode this batch runs in.
+
+        ``fused`` resolves to its mesh variant (``fused_sharded``) when a
+        mesh is attached; ``auto`` picks compact below the frontier-size
+        threshold and the fused path above it (device-resident while_loop
+        beats per-round host dispatch whenever the frontier stays large
+        for many rounds)."""
         mode = self.config.frontier
-        if mode != "auto":
-            return mode
-        frac = float(active.sum()) / max(n, 1)
-        if frac <= self.config.compact_threshold:
-            return "compact"
-        return "sharded" if self.mesh is not None else "dense"
+        if mode == "auto":
+            frac = float(active.sum()) / max(n, 1)
+            if frac <= self.config.compact_threshold:
+                return "compact"
+            mode = "fused"
+        if mode == "fused" and self.mesh is not None:
+            return "fused_sharded"
+        return mode
 
     def _make_step(self, mode: str, n: int, n_iters: int):
         """Build the per-round step(est, active) -> (new_est, changed, recv)
@@ -524,12 +614,10 @@ class StreamingKCoreEngine:
 
         # sharded: shard the slot arrays (already src-sorted — no sort) and
         # iterate the masked shard_map superstep
-        from repro.graph.partition import shard_arc_arrays
-
-        n_dev = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
-        sg = shard_arc_arrays(n, src, dst, live, deg, n_dev, pow2=True)
+        sg = self._shard_slots(n)
         superstep, _ = make_sharded_superstep(sg, self.mesh, self.axis_names,
                                               n_iters, masked=True)
+        n_dev = sg.n_shards
         V, n_pad = sg.verts_per_shard, sg.n_pad
         src_j = jnp.asarray(sg.src)
         dst_j = jnp.asarray(sg.dst)
@@ -551,23 +639,79 @@ class StreamingKCoreEngine:
 
         return step
 
+    def _shard_slots(self, n: int):
+        """Shard the CSR slot arrays over the mesh with the arc-block
+        high-water floor applied (src-sorted by construction — no sort)."""
+        from repro.graph.partition import shard_arc_arrays
+
+        src_live, dst_live = self._live_arrays()
+        n_dev = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
+        sg = shard_arc_arrays(n, src_live, dst_live,
+                              np.ones(src_live.size, bool), self._csr.deg,
+                              n_dev, pow2=True,
+                              min_arcs_per_shard=self._shard_A_floor)
+        self._shard_A_floor = max(self._shard_A_floor, sg.arcs_per_shard)
+        return sg
+
+    def _run_fused(self, seed: np.ndarray, active: np.ndarray, n: int,
+                   n_iters: int, cap: int, sharded: bool):
+        """One fused device-resident re-convergence (core.fused_convergence
+        or its nested-shard_map variant). Returns (core, rounds, converged,
+        msgs, changed, recv) with the three int64 arrays covering exactly
+        the productive rounds — the host-loop modes' accounting."""
+        csr = self._csr
+        if sharded:
+            sg = self._shard_slots(n)
+            prog = _fused_sharded_convergence(self.mesh, self.axis_names,
+                                              sg.verts_per_shard, n_iters,
+                                              cap)
+            n_dev, V = sg.n_shards, sg.verts_per_shard
+            est_p = np.zeros(sg.n_pad, np.int32)
+            est_p[:n] = seed
+            act_p = np.zeros(sg.n_pad, bool)
+            act_p[:n] = active
+            est_j, r, stop, final_act, mb, cb, rb = prog(
+                jnp.asarray(est_p.reshape(n_dev, V)), jnp.asarray(sg.src),
+                jnp.asarray(sg.dst), jnp.asarray(sg.arc_mask),
+                jnp.asarray(sg.deg), jnp.asarray(act_p.reshape(n_dev, V)))
+            core = np.asarray(est_j).reshape(-1)[:n].astype(np.int32)
+        else:
+            src_j, dst_j, amask_j = (jnp.asarray(a) for a in
+                                     self._padded_slots())
+            est_j, r, stop, final_act, mb, cb, rb = fused_convergence(
+                jnp.asarray(seed), src_j, dst_j, amask_j,
+                jnp.asarray(active), jnp.asarray(csr.deg), n=n,
+                n_iters=n_iters, max_rounds=cap)
+            core = np.asarray(est_j, np.int32)
+        _k, m_r, c_r, r_r, converged = fused_round_stats(r, stop, final_act,
+                                                         mb, cb, rb)
+        return core, int(r), converged, m_r, c_r, r_r
+
     # ------------------------------------------------------------------ #
     def apply_batch(self, batch: EdgeBatch) -> BatchResult:
+        compiles0 = compile_count()
         t0 = time.perf_counter()
         delta = self._csr.apply_batch(batch)
         patch_s = time.perf_counter() - t0
         self._graph_cache = None
         self._slots_cache = None
+        self._live_cache = None
         csr = self._csr
         n = csr.n
-        src, dst, live = csr.src, csr.dst, csr.live
         deg64 = csr.deg.astype(np.int64)
 
         old_core_ext = np.zeros(n, np.int64)
         old_core_ext[: self.core.shape[0]] = self.core
-        src_p, dst_p, live_p = self._padded_slots()
-        U = _insertion_upper_bound_arrays(n, src_p, dst_p, live_p, csr.deg,
-                                          old_core_ext, delta.inserted)
+        ins_count = int(delta.inserted.shape[0])
+        if ins_count and ins_count >= self.config.bulk_seed_frac * max(
+                csr.m, 1):
+            # bulk load: degree seed (see StreamingConfig.bulk_seed_frac)
+            U = deg64.copy()
+        else:
+            src_p, dst_p, live_p = self._padded_slots()
+            U = _insertion_upper_bound_arrays(n, src_p, dst_p, live_p,
+                                              csr.deg, old_core_ext,
+                                              delta.inserted)
         seed = np.minimum(U, deg64).astype(np.int32)
         region = U > old_core_ext
         old_core32 = old_core_ext.astype(np.int32)
@@ -586,7 +730,9 @@ class StreamingKCoreEngine:
         touched = delta.touched[delta.touched < n]
         active[touched] = True
         active |= seed_changed
-        active |= _receivers_arrays(n, src, dst, live, seed_changed)
+        src_live, dst_live = self._live_arrays()
+        active |= _receivers_arrays(n, src_live, dst_live, None,
+                                    seed_changed)
         # active_per_round follows the static engine's convention:
         # [r] = vertices recomputing/broadcasting in round r. Round 0 is the
         # seed rebroadcast; round 1's recomputers are the initial frontier.
@@ -597,24 +743,39 @@ class StreamingKCoreEngine:
         rounds, converged = 0, False
         cap = (self.config.max_rounds if self.config.max_rounds is not None
                else n + 1)
-        n_iters = _bs_iters(int(csr.deg.max()) if n else 0)
-        step = self._make_step(mode, n, n_iters)
+        # the binary-search depth is bucketed (multiple of 4) and high-water-
+        # marked: extra iterations are idempotent at the h-index fixpoint,
+        # so neither a shrinking max degree nor one that creeps up by single
+        # bits may mint a fresh jit signature
+        n_iters = _round_up(_bs_iters(int(csr.deg.max()) if n else 0), 4)
+        n_iters = self._n_iters_hwm = max(n_iters, self._n_iters_hwm)
 
-        while rounds < cap and active.any():
-            new_est, ch, recv = step(est, active)
-            rounds += 1
-            if not ch.any():
+        if mode in ("fused", "fused_sharded"):
+            if active.any():
+                core, rounds, converged, m_r, c_r, r_r = self._run_fused(
+                    seed, active, n, n_iters, cap,
+                    sharded=mode == "fused_sharded")
+                msgs.extend(m_r.tolist())
+                changed_counts.extend(c_r.tolist())
+                actives.extend(r_r.tolist())
+            else:
+                core, converged = np.asarray(seed, np.int32), True
+        else:
+            step = self._make_step(mode, n, n_iters)
+            while rounds < cap and active.any():
+                new_est, ch, recv = step(est, active)
+                rounds += 1
+                if not ch.any():
+                    converged = True
+                    break
+                msgs.append(int(deg64[ch].sum()))
+                changed_counts.append(int(ch.sum()))
+                active = recv
+                actives.append(int(active.sum()))
+                est = new_est
+            if not active.any():
                 converged = True
-                break
-            msgs.append(int(deg64[ch].sum()))
-            changed_counts.append(int(ch.sum()))
-            active = recv
-            actives.append(int(active.sum()))
-            est = new_est
-        if not active.any():
-            converged = True
-
-        core = np.asarray(est, np.int32)
+            core = np.asarray(est, np.int32)
         stats = MessageStats(
             messages_per_round=np.asarray(msgs, np.int64),
             active_per_round=np.asarray(actives[: len(msgs)], np.int64),
@@ -629,6 +790,7 @@ class StreamingKCoreEngine:
                            region_size=int(region.sum()),
                            seed_changed=int(seed_changed.sum()),
                            mode=mode, patch_s=patch_s,
+                           recompiles=compile_count() - compiles0,
                            csr_compactions=int(csr.compactions),
                            csr_dead_frac=csr.dead / cap_slots,
                            csr_occupancy=2 * csr.m / cap_slots)

@@ -47,6 +47,7 @@ class ReplayRecord:
     mode: str
     patch_ms: float
     step_ms: float            # wall time of the whole advance
+    recompiles: int           # fresh XLA compilations this step caused
     csr_compactions: int
     csr_dead_frac: float
     csr_occupancy: float
@@ -84,6 +85,7 @@ class ReplayTrajectory:
             "max_core_seen": int(self.series("core_max").max()),
             "mean_patch_ms": round(float(self.series("patch_ms").mean()), 3),
             "mean_step_ms": round(float(self.series("step_ms").mean()), 3),
+            "recompiles": int(self.series("recompiles").sum()),
             "oracle_checks": int(sum(r.oracle_ok is not None
                                      for r in self.records)),
             "compactions": int(self.records[-1].csr_compactions),
@@ -106,6 +108,7 @@ def record_step(ws: WindowStep, wall_s: float,
         region=int(res.region_size), mode=res.mode,
         patch_ms=round(res.patch_s * 1e3, 3),
         step_ms=round(wall_s * 1e3, 3),
+        recompiles=int(res.recompiles),
         csr_compactions=int(res.csr_compactions),
         csr_dead_frac=round(res.csr_dead_frac, 4),
         csr_occupancy=round(res.csr_occupancy, 4),

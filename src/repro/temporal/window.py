@@ -21,8 +21,11 @@ Two window kinds, both with configurable stride:
 
 The vertex universe is fixed to ``log.n`` up front so core vectors are
 comparable across the whole replay (an absent vertex has core 0), and all
-streaming frontier modes (dense/compact/sharded/auto, optional mesh) pass
-straight through to the maintenance engine.
+streaming frontier modes (dense/compact/sharded/fused/auto, optional
+mesh) pass straight through to the maintenance engine. The window size
+also pre-seeds the engine's padded-shape floors (CSR slack and
+``min_arc_capacity``) so a replay-from-empty neither compacts per insert
+nor recompiles its jitted programs at every pow2 size on the way up.
 
 The as-of store (``CoreCheckpointRing``: a bounded ring of (t, core)
 snapshots pushed at window boundaries, answering "core numbers at time t"
@@ -102,6 +105,14 @@ class WindowedKCoreEngine:
                               / max(self.n, 1)))
             if est > config.min_slack:
                 config = dataclasses.replace(config, min_slack=est)
+            # pre-seed the engine's padded live-arc shape to the expected
+            # window load (2 arcs per event over-counts removes — padding
+            # only), so the replay's jitted programs compile at the steady
+            # shape on step 0 instead of once per pow2 size on the way up
+            cap_floor = int(2 * min(w_events, len(log)))
+            if cap_floor > config.min_arc_capacity:
+                config = dataclasses.replace(config,
+                                             min_arc_capacity=cap_floor)
         self.config = config
         empty = Graph.from_edges(np.zeros((0, 2), np.int64), n=self.n)
         self.engine = StreamingKCoreEngine(empty, config, kcore_config,

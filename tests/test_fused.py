@@ -1,0 +1,103 @@
+"""Fused device-resident convergence (ISSUE 4): the ``fused`` frontier mode
+— one jitted lax.while_loop per batch — must be EXACT-equal to the
+host-loop ``dense`` mode in cores AND per-round message accounting
+(messages / active / changed per round, round count, convergence flag),
+single-device and through the nested-shard_map ``fused_sharded`` variant,
+and BZ-oracle-correct after every batch."""
+
+import numpy as np
+
+from repro.core import bz_core_numbers
+from repro.distribution.compat import make_mesh
+from repro.graph import generators as gen
+from repro.graph.structs import Graph
+from repro.streaming import (EdgeBatch, StreamingConfig,
+                             StreamingKCoreEngine, canonical_edges,
+                             random_churn_batch)
+
+
+def assert_exact_equal(ref, got):
+    """Full BatchResult accounting equality (not just the cores)."""
+    assert (ref.core == got.core).all()
+    assert (ref.stats.messages_per_round
+            == got.stats.messages_per_round).all()
+    assert (ref.stats.active_per_round == got.stats.active_per_round).all()
+    assert (ref.stats.changed_per_round
+            == got.stats.changed_per_round).all()
+    assert ref.rounds == got.rounds
+    assert ref.converged == got.converged
+
+
+def test_fused_equals_dense_random_churn():
+    g = gen.barabasi_albert(200, 4, seed=9)
+    dense = StreamingKCoreEngine(g, StreamingConfig(frontier="dense"))
+    fused = StreamingKCoreEngine(g, StreamingConfig(frontier="fused"))
+    rng = np.random.default_rng(4)
+    for _ in range(4):
+        batch = random_churn_batch(dense.graph, 10, 10, rng)
+        r1, r2 = dense.apply_batch(batch), fused.apply_batch(batch)
+        assert r2.mode == "fused"
+        assert_exact_equal(r1, r2)
+        assert (r2.core == bz_core_numbers(dense.graph)).all()
+
+
+def test_fused_sharded_equals_dense_1dev():
+    g = gen.barabasi_albert(180, 4, seed=5)
+    mesh = make_mesh((1,), ("data",))
+    dense = StreamingKCoreEngine(g, StreamingConfig(frontier="dense"))
+    fsh = StreamingKCoreEngine(g, StreamingConfig(frontier="fused"),
+                               mesh=mesh)
+    rng = np.random.default_rng(6)
+    for _ in range(3):
+        batch = random_churn_batch(dense.graph, 10, 10, rng)
+        r1, r2 = dense.apply_batch(batch), fsh.apply_batch(batch)
+        assert r2.mode == "fused_sharded"
+        assert_exact_equal(r1, r2)
+        assert (r2.core == bz_core_numbers(dense.graph)).all()
+
+
+def test_fused_cascades_deletes_and_empty_batch():
+    """The fused while_loop must handle the extremes the host loop does:
+    a multi-pass cascade (K8 from empty: every core 0 -> 7), delete-all,
+    and the empty batch (zero messages, zero rounds, loop never entered)."""
+    eng = StreamingKCoreEngine(Graph.from_edges(np.zeros((0, 2)), n=8),
+                               StreamingConfig(frontier="fused"))
+    iu = np.triu_indices(8, k=1)
+    res = eng.apply_batch(EdgeBatch.make(insert=np.stack(iu, axis=1)))
+    assert (res.core == 7).all() and res.converged
+
+    empty = eng.apply_batch(EdgeBatch.make())
+    assert empty.total_messages == 0 and empty.rounds == 0
+    assert (empty.core == 7).all()
+
+    res = eng.apply_batch(EdgeBatch.make(delete=canonical_edges(eng.graph)))
+    assert (res.core == 0).all() and res.converged
+
+
+def test_fused_respects_max_rounds_cap():
+    """A tight round cap must stop the while_loop exactly where the host
+    loop stops — same partial estimate, same accounting, converged=False."""
+    g = gen.cycle(40)
+    cfg = dict(max_rounds=1)
+    dense = StreamingKCoreEngine(g, StreamingConfig(frontier="dense", **cfg))
+    fused = StreamingKCoreEngine(g, StreamingConfig(frontier="fused", **cfg))
+    # deleting one edge unravels the 2-core cycle one step per round — far
+    # more rounds than the cap allows
+    batch = EdgeBatch.make(delete=canonical_edges(g)[:1])
+    r1, r2 = dense.apply_batch(batch), fused.apply_batch(batch)
+    assert not r1.converged
+    assert_exact_equal(r1, r2)
+
+
+def test_auto_prefers_fused_above_compact_threshold():
+    g = gen.barabasi_albert(300, 4, seed=8)
+    eng = StreamingKCoreEngine(
+        g, StreamingConfig(frontier="auto", compact_threshold=0.02))
+    rng = np.random.default_rng(9)
+    seen = set()
+    for batch in (EdgeBatch.make(delete=canonical_edges(eng.graph)[:1]),
+                  random_churn_batch(eng.graph, 60, 60, rng)):
+        res = eng.apply_batch(batch)
+        seen.add(res.mode)
+        assert (res.core == bz_core_numbers(eng.graph)).all()
+    assert seen == {"compact", "fused"}

@@ -1,0 +1,61 @@
+"""Hypothesis property tests for the fused convergence path (ISSUE 4):
+on randomized churn batches over random graphs, ``fused`` and
+``fused_sharded`` must produce identical cores AND identical per-round
+message bills to the host-loop ``dense`` mode, and all of them the exact
+BZ cores — duplicate pairs, self-loops, no-op churn, and empty batches
+included."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see "
+                    "requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bz_core_numbers
+from repro.distribution.compat import make_mesh
+from repro.graph.structs import Graph
+from repro.streaming import (EdgeBatch, StreamingConfig,
+                             StreamingKCoreEngine)
+# tests/ is not a package; pytest puts it on sys.path (prepend import mode)
+from test_fused import assert_exact_equal
+
+
+@st.composite
+def graph_and_churn(draw):
+    """Small random graph + a short sequence of messy churn batches:
+    duplicate pairs, self-loops, no-op inserts/deletes, empty batches,
+    and deletes of never-present edges are all the common case."""
+    n = draw(st.integers(2, 12))
+
+    def pairs(max_len):
+        return draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            max_size=max_len))
+
+    edges = pairs(30)
+    batches = [EdgeBatch.make(insert=pairs(10), delete=pairs(10))
+               for _ in range(draw(st.integers(1, 3)))]
+    return n, edges, batches
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_and_churn())
+def test_fused_modes_exact_property(case):
+    """Property (ISSUE 4 acceptance): after EVERY batch, fused and
+    sharded+fused produce identical cores AND identical per-round message
+    bills to dense, and all three equal the BZ oracle."""
+    n, edges, batches = case
+    g = Graph.from_edges(np.asarray(edges, np.int64).reshape(-1, 2), n=n)
+    mesh = make_mesh((1,), ("data",))
+    dense = StreamingKCoreEngine(g, StreamingConfig(frontier="dense"))
+    fused = StreamingKCoreEngine(g, StreamingConfig(frontier="fused"))
+    fsh = StreamingKCoreEngine(g, StreamingConfig(frontier="fused"),
+                               mesh=mesh)
+    for batch in batches:
+        r1 = dense.apply_batch(batch)
+        r2 = fused.apply_batch(batch)
+        r3 = fsh.apply_batch(batch)
+        assert_exact_equal(r1, r2)
+        assert_exact_equal(r1, r3)
+        assert (r1.core == bz_core_numbers(dense.graph)).all()

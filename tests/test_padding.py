@@ -1,0 +1,44 @@
+"""The shared padding policy (graph/padding): one round_up, one next_pow2,
+no private copies — graph/structs, graph/partition, and streaming/engine
+must all resolve to these."""
+
+import pytest
+
+from repro.graph.padding import next_pow2, round_up
+
+
+@pytest.mark.parametrize("x,mult,want", [
+    (0, 4, 0), (1, 4, 4), (4, 4, 4), (5, 4, 8),
+    (17, 8, 24), (7, 1, 7), (9, 0, 9), (3, -2, 3),
+])
+def test_round_up(x, mult, want):
+    assert round_up(x, mult) == want
+
+
+@pytest.mark.parametrize("x,want", [
+    (0, 1), (1, 1), (2, 2), (3, 4), (4, 4), (5, 8),
+    (1023, 1024), (1024, 1024), (1025, 2048),
+])
+def test_next_pow2(x, want):
+    assert next_pow2(x) == want
+
+
+def test_next_pow2_is_monotone_cover():
+    prev = 0
+    for x in range(1, 300):
+        p = next_pow2(x)
+        assert p >= x and p >= prev         # covering and monotone
+        assert p & (p - 1) == 0             # a power of two
+        prev = p
+
+
+def test_consumers_share_one_copy():
+    """The deduped helpers: every former private copy must BE the shared
+    function, not a drifted clone."""
+    from repro.graph import partition, structs
+    from repro.streaming import engine
+
+    assert partition._next_pow2 is next_pow2
+    assert partition._round_up is round_up
+    assert structs._round_up is round_up
+    assert engine._next_pow2 is next_pow2

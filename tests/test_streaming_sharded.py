@@ -1,7 +1,7 @@
-"""Mesh-parallel streaming maintenance: the sharded frontier mode must be
-exact-equal (cores AND per-round message counts) to the single-device
-engine, in-process on a 1-device mesh and in a subprocess on forced
-multi-device host meshes."""
+"""Mesh-parallel streaming maintenance: the sharded and fused_sharded
+frontier modes must be exact-equal (cores AND per-round message counts) to
+the single-device engine, in-process on a 1-device mesh and in a
+subprocess on forced multi-device host meshes."""
 
 import json
 import subprocess
@@ -52,8 +52,8 @@ def test_sharded_apply_batch_matches_dense_1dev(kind):
 
 
 def test_auto_mode_picks_and_stays_exact():
-    """auto picks compact below the frontier threshold and the mesh mode
-    above it; every choice stays BZ-exact."""
+    """auto picks compact below the frontier threshold and the fused mesh
+    mode above it; every choice stays BZ-exact."""
     g = gen.barabasi_albert(300, 4, seed=8)
     mesh = make_mesh((1,), ("data",))
     eng = StreamingKCoreEngine(
@@ -61,13 +61,14 @@ def test_auto_mode_picks_and_stays_exact():
         mesh=mesh)
     rng = np.random.default_rng(9)
     seen = set()
-    # a tiny batch localizes the frontier -> compact; heavy churn -> sharded
+    # a tiny batch localizes the frontier -> compact; heavy churn -> the
+    # device-resident fused loop on the mesh
     for batch in (EdgeBatch.make(delete=canonical_edges(eng.graph)[:1]),
                   random_churn_batch(eng.graph, 60, 60, rng)):
         res = eng.apply_batch(batch)
         seen.add(res.mode)
         assert (res.core == bz_core_numbers(eng.graph)).all()
-    assert "compact" in seen and "sharded" in seen
+    assert "compact" in seen and "fused_sharded" in seen
 
 
 _SCRIPT = r"""
@@ -87,6 +88,8 @@ g = gen.barabasi_albert(400, 4, seed=2)
 dense = StreamingKCoreEngine(g, StreamingConfig(frontier="dense"))
 shard = StreamingKCoreEngine(g, StreamingConfig(frontier="sharded"),
                              mesh=mesh, axis_names={axes})
+fused = StreamingKCoreEngine(g, StreamingConfig(frontier="fused"),
+                             mesh=mesh, axis_names={axes})
 rng = np.random.default_rng(0)
 edges = canonical_edges(g)
 batches = [
@@ -98,9 +101,15 @@ batches = [
 rounds = []
 for b in batches:
     r1, r2 = dense.apply_batch(b), shard.apply_batch(b)
+    r3 = fused.apply_batch(b)
+    assert r3.mode == "fused_sharded", r3.mode
     assert (r1.core == r2.core).all(), "core mismatch"
     assert (r1.stats.messages_per_round
             == r2.stats.messages_per_round).all(), "msg mismatch"
+    assert (r1.core == r3.core).all(), "fused core mismatch"
+    assert (r1.stats.messages_per_round
+            == r3.stats.messages_per_round).all(), "fused msg mismatch"
+    assert r1.rounds == r3.rounds, "fused round mismatch"
     assert (r1.core == bz_core_numbers(dense.graph)).all(), "oracle"
     rounds.append(r2.rounds)
 print(json.dumps({{"rounds": rounds}}))
@@ -114,7 +123,8 @@ print(json.dumps({{"rounds": rounds}}))
 def test_sharded_streaming_multidevice(ndev, mesh_shape, axes):
     """Subprocess (forced host devices): insert-only / delete-only / mixed
     batches give identical cores and message bills on real multi-device
-    meshes."""
+    meshes, for both the per-round sharded mode and the fused while_loop
+    (ISSUE 4 acceptance: fused exact on 1- and 2-axis meshes)."""
     script = _SCRIPT.format(ndev=ndev, mesh_shape=mesh_shape,
                             axes=tuple(axes))
     proc = subprocess.run(

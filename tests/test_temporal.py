@@ -303,11 +303,11 @@ def test_server_windowed_replay_and_asof_queries():
 # ---------------------------------------------------------------------- #
 
 def test_windowed_replay_10k_snap_analogue_all_modes():
-    """ISSUE 3 acceptance: windowed replay over a 10k-vertex temporal SNAP
-    analogue maintains exact core numbers at every window boundary in
-    dense, compact, and sharded frontier modes — BZ-verified on the dense
-    leg, and the other modes must match its cores AND per-round message
-    bills exactly."""
+    """ISSUE 3/4 acceptance: windowed replay over a 10k-vertex temporal
+    SNAP analogue maintains exact core numbers at every window boundary in
+    dense, compact, sharded, and fused frontier modes — BZ-verified on the
+    dense leg, and the other modes must match its cores AND per-round
+    message bills exactly."""
     entry = gen.SNAP_BY_ABBREV["EEN"]
     log = temporal_snap_analogue("EEN", scale=10_000 / entry.n, seed=0,
                                  remove_frac=0.15)
@@ -318,7 +318,7 @@ def test_windowed_replay_10k_snap_analogue_all_modes():
     engines = {mode: WindowedKCoreEngine(log, window, stride,
                                          config=StreamingConfig(
                                              frontier=mode))
-               for mode in ("dense", "compact", "sharded")}
+               for mode in ("dense", "compact", "sharded", "fused")}
     steps = 0
     while not engines["dense"].done and steps < 4:
         ws = {mode: e.advance() for mode, e in engines.items()}
@@ -327,7 +327,7 @@ def test_windowed_replay_10k_snap_analogue_all_modes():
         wg = engines["dense"].window_graph()
         assert (ref.result.core == bz_core_numbers(wg)).all(), (
             f"step {steps}: dense cores diverged from the BZ oracle")
-        for mode in ("compact", "sharded"):
+        for mode in ("compact", "sharded", "fused"):
             got = ws[mode]
             assert (got.result.core == ref.result.core).all(), (
                 f"step {steps}: {mode} cores diverged from dense")
