@@ -19,8 +19,16 @@ from repro.graph import generators as gen
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.05"))
 # Graphs small enough to run at every scale; the multi-million-vertex ones
 # are clamped so CPU bench time stays bounded.
-_CLAMP = {"SPR": 0.02, "LJ1": 0.01, "CLJ": 0.01, "WS": 0.05, "WG": 0.05,
-          "A0505": 0.05, "CA": 0.05, "EEU": 0.05}
+_CLAMP = {
+    "SPR": 0.02,
+    "LJ1": 0.01,
+    "CLJ": 0.01,
+    "WS": 0.05,
+    "WG": 0.05,
+    "A0505": 0.05,
+    "CA": 0.05,
+    "EEU": 0.05,
+}
 
 _cache: dict = {}
 
@@ -32,12 +40,14 @@ def graph_for(abbrev: str):
     return _cache[abbrev]
 
 
-def decompose(abbrev: str, config: KCoreConfig | None = None):
-    key = (abbrev, config)
+def decompose(abbrev: str, config: KCoreConfig | None = None, fused: bool = False):
+    """Cached (result, wall_s) of one decomposition — ``fused=True`` routes
+    the round loop through the shared fused runtime (same accounting)."""
+    key = (abbrev, config, fused)
     if key not in _cache:
         g = graph_for(abbrev)
         t0 = time.perf_counter()
-        res = kcore_decompose(g, config or KCoreConfig())
+        res = kcore_decompose(g, config or KCoreConfig(), fused=fused)
         wall = time.perf_counter() - t0
         _cache[key] = (res, wall)
     return _cache[key]

@@ -11,15 +11,21 @@ from benchmarks.common import csv_row, decompose
 
 
 def run() -> list[str]:
-    rows = [csv_row("graph", "sim_wall_s", "internet_s", "datacenter_s",
-                    "tpu_pod_s", "latency_bound_frac_internet")]
+    rows = [csv_row("graph", "sim_wall_s", "fused_wall_s", "fused_speedup",
+                    "internet_s", "datacenter_s", "tpu_pod_s",
+                    "latency_bound_frac_internet")]
     for e in SNAP_TABLE:
         res, wall = decompose(e.abbrev)
+        # fused mode: same decomposition as one device-resident while_loop
+        # (identical message bill — checked in fig5); first call pays the
+        # XLA compile, so this wall is an upper bound on the fused cost
+        _fres, fwall = decompose(e.abbrev, fused=True)
         t_net = simulate_runtime(res.stats, INTERNET)
         t_dc = simulate_runtime(res.stats, DATACENTER)
         t_tpu = simulate_runtime(res.stats, TPU_POD)
         rows.append(csv_row(
-            e.abbrev, round(wall, 3), round(t_net["total_s"], 4),
+            e.abbrev, round(wall, 3), round(fwall, 3),
+            round(wall / max(fwall, 1e-9), 2), round(t_net["total_s"], 4),
             round(t_dc["total_s"], 6), round(t_tpu["total_s"], 6),
             round(t_net["latency_bound_fraction"], 3)))
     return rows

@@ -31,6 +31,7 @@ BENCHES = {
     "roofline": "benchmarks.roofline",
     "streaming": "benchmarks.streaming_maintenance",
     "temporal": "benchmarks.temporal_replay",
+    "static": "benchmarks.static_decomposition",
 }
 
 

@@ -1,0 +1,148 @@
+"""Static decomposition benchmark: host-loop vs fused runtime (ISSUE 5).
+
+The paper's headline experiment — from-scratch distributed k-core
+decomposition — run over Table-I analogues in BOTH execution modes:
+
+* ``host`` — the per-round Python loop (one jitted superstep per round);
+* ``fused`` — the whole round loop as ONE device-resident ``lax.while_loop``
+  through the shared fused runtime (``kcore_decompose(..., fused=True)``).
+
+Every graph asserts the fused mode bit-equal to the host loop (cores AND
+per-round messages/active/changed, round count, convergence flag) and the
+host cores exact vs the BZ oracle — so the wall/ratio columns only compare
+things that provably compute the same answer. The fused column reports a
+cold wall (first call, pays the XLA compile, ``recompiles`` counts it) and
+a warm wall (second call, all programs cache hits) separately.
+
+``benchmarks.static_gate`` turns the per-graph messages-over-work-bound
+ratio into a CI regression gate against ``benchmarks/static_baseline.json``
+(message bills are integer-deterministic for seeded generators, so the
+tight gate is an exactness lock on the paper's measurement set, not a noise
+threshold) and writes the full structured output as ``BENCH_static.json``.
+
+Environment knobs (for CI smoke):
+  REPRO_BENCH_SCALE          analogue scale        (default 0.05, common.py)
+  REPRO_STATIC_BENCH_GRAPHS  comma-separated Table-I abbrevs
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALE, csv_row, graph_for
+from repro.core import bz_core_numbers, kcore_decompose, work_bound
+
+GRAPHS = tuple(os.environ.get("REPRO_STATIC_BENCH_GRAPHS", "EEN,G31,FC,PTBR,MGF").split(","))
+
+COLUMNS = (
+    "graph",
+    "n",
+    "m",
+    "max_core",
+    "rounds",
+    "total_messages",
+    "work_bound",
+    "ratio",
+    "host_ms",
+    "host_ms_per_round",
+    "fused_cold_ms",
+    "fused_ms",
+    "fused_ms_per_round",
+    "recompiles",
+    "speedup",
+    "bit_equal",
+    "oracle_ok",
+)
+
+
+def settings() -> dict:
+    return {"scale": SCALE, "graphs": list(GRAPHS)}
+
+
+def _bit_equal(a, b) -> bool:
+    return bool(
+        (a.core == b.core).all()
+        and (a.stats.messages_per_round == b.stats.messages_per_round).all()
+        and (a.stats.active_per_round == b.stats.active_per_round).all()
+        and (a.stats.changed_per_round == b.stats.changed_per_round).all()
+        and a.rounds == b.rounds
+        and a.converged == b.converged
+    )
+
+
+def run_records() -> list[dict]:
+    """Structured per-graph records (CSV in run(), JSON in static_gate)."""
+    records = []
+    for abbrev in GRAPHS:
+        g = graph_for(abbrev)
+
+        t0 = time.perf_counter()
+        host = kcore_decompose(g)
+        host_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        fused = kcore_decompose(g, fused=True)
+        fused_cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fused_warm = kcore_decompose(g, fused=True)
+        fused_s = time.perf_counter() - t0
+
+        bit_equal = _bit_equal(host, fused) and _bit_equal(host, fused_warm)
+        assert bit_equal, (
+            f"{abbrev}: fused decomposition diverged from the host loop "
+            "(cores or per-round accounting)"
+        )
+        ok = bool((host.core == bz_core_numbers(g)).all())
+        assert ok, f"{abbrev}: host-loop cores diverged from the BZ oracle"
+
+        wb = work_bound(g, host.core)
+        rounds = max(host.rounds, 1)
+        records.append(
+            {
+                "graph": abbrev,
+                "n": g.n,
+                "m": g.m,
+                "max_core": int(host.core.max()) if g.n else 0,
+                "rounds": host.rounds,
+                "total_messages": int(host.stats.total_messages),
+                "work_bound": wb,
+                "ratio": round(host.stats.total_messages / max(wb, 1), 4),
+                "host_ms": round(host_s * 1e3, 3),
+                "host_ms_per_round": round(host_s * 1e3 / rounds, 3),
+                "fused_cold_ms": round(fused_cold_s * 1e3, 3),
+                "fused_ms": round(fused_s * 1e3, 3),
+                "fused_ms_per_round": round(fused_s * 1e3 / rounds, 3),
+                "recompiles": fused.recompiles,
+                "speedup": round(host_s / max(fused_s, 1e-9), 2),
+                "bit_equal": bit_equal,
+                "oracle_ok": ok,
+            }
+        )
+    return records
+
+
+def summarize(records: list[dict]) -> dict:
+    """Per-graph gated ratio (messages over the paper's work bound W) plus
+    the wall/compile telemetry the baseline records as info keys."""
+    return {
+        r["graph"]: {
+            "mean_ratio": r["ratio"],
+            "mean_ms_per_round": r["fused_ms_per_round"],
+            "host_ms_per_round": r["host_ms_per_round"],
+            "recompiles": r["recompiles"],
+            "speedup": r["speedup"],
+        }
+        for r in records
+    }
+
+
+def run() -> list[str]:
+    records = run_records()
+    rows = [csv_row(*COLUMNS)]
+    rows.extend(csv_row(*(r[c] for c in COLUMNS)) for r in records)
+    speedups = [r["speedup"] for r in records]
+    rows.append(csv_row("# mean_speedup", round(float(np.mean(speedups)), 2), ""))
+    return rows

@@ -1,0 +1,43 @@
+"""CI perf gate over the static decomposition benchmark (ISSUE 5).
+
+Runs benchmarks.static_decomposition — the paper's from-scratch experiment
+in host-loop AND fused modes, asserting bit-equal per-round message bills
+between the modes and BZ-exact cores — writes the full structured output to
+a JSON artifact (BENCH_static.json), and fails if any per-graph
+messages-over-work-bound ratio regresses past the threshold against the
+committed baseline (benchmarks/static_baseline.json). Message counts are
+integer-deterministic for the seeded analogues, so CI runs this gate tight
+(an exactness lock on the paper's measurement set); the fused wall and
+recompile telemetry ride along as info keys. Gate semantics (thresholds,
+baseline settings match, --write-baseline) live in benchmarks.gate_common,
+shared with the streaming and temporal gates.
+
+    # CI (smoke settings; the workflow uses the default scale):
+    python -m benchmarks.static_gate --require-match --max-regression 1.02
+
+    # refresh the committed baseline after an intended change:
+    python -m benchmarks.static_gate --write-baseline
+"""
+
+import pathlib
+import sys
+
+from benchmarks.gate_common import gate_main
+from benchmarks.static_decomposition import run_records, settings, summarize
+
+BASELINE = pathlib.Path(__file__).parent / "static_baseline.json"
+
+
+def main() -> int:
+    return gate_main(
+        run_records=run_records,
+        settings=settings,
+        summarize=summarize,
+        baseline=BASELINE,
+        default_out="BENCH_static.json",
+        label="static",
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

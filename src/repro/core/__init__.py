@@ -14,9 +14,21 @@ from repro.core.kcore import (
     make_sharded_superstep,
     masked_round_segment,
 )
+from repro.core.cost_model import SeedCostModel, choose_seed, estimate_ub_passes
 from repro.core.messages import MessageStats, heartbeat_overhead, work_bound
+from repro.core.runtime import (
+    FusedOutcome,
+    fused_converge_dense,
+    fused_converge_sharded,
+)
 
 __all__ = [
+    "SeedCostModel",
+    "choose_seed",
+    "estimate_ub_passes",
+    "FusedOutcome",
+    "fused_converge_dense",
+    "fused_converge_sharded",
     "bz_core_numbers",
     "max_core",
     "compile_count",

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.jit_telemetry import compile_count
 from repro.core.messages import MessageStats
 from repro.graph.partition import ShardedGraph
 from repro.graph.structs import EllGraph, Graph
@@ -57,6 +58,10 @@ class KCoreConfig:
     n_blocks: int = 8               # block_gs sweep granularity
     max_rounds: int | None = None   # None → n (the worst-case depth)
     widths: tuple[int, ...] = (8, 32, 128, 512, 2048)
+    # run the whole round loop as ONE device-resident lax.while_loop via the
+    # shared fused runtime (core/runtime.py) instead of one jitted superstep
+    # per Python-loop round. jacobi only; accounting is bit-equal either way.
+    fused: bool = False
 
 
 @dataclasses.dataclass
@@ -65,6 +70,11 @@ class KCoreResult:
     rounds: int
     converged: bool
     stats: MessageStats
+    # fresh XLA compilations this decomposition caused (process-wide delta
+    # of repro.core.jit_telemetry.compile_count; 0 = every jitted program
+    # was a cache hit) — makes the fused path's O(log)-compiles claim
+    # measurable in benchmarks/static_decomposition.py
+    recompiles: int = 0
 
 
 def _bs_iters(max_deg: int) -> int:
@@ -356,14 +366,26 @@ def _make_round_block_gs(sg: ShardedGraph, n_iters: int):
 # Driver
 # ---------------------------------------------------------------------- #
 
-def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig()
-                    ) -> KCoreResult:
+def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig(), *,
+                    fused: bool | None = None) -> KCoreResult:
     """Run distributed k-core decomposition to the fixpoint on one host.
 
     Per-round message/active accounting follows the paper exactly (see
-    core/messages.py). The Python loop is over rounds only; each round is one
-    jitted superstep.
+    core/messages.py). By default the Python loop is over rounds only; each
+    round is one jitted superstep. With ``fused=True`` (keyword override of
+    ``config.fused``) the ENTIRE round loop runs as one device-resident
+    ``lax.while_loop`` through the shared fused runtime (core/runtime.py) —
+    no per-round host round-trips — and the per-round stats are
+    reconstructed from device buffers, bit-equal to the host loop
+    (hypothesis-tested, BZ-verified). Fused is jacobi-only; the backend is
+    ignored there (every backend computes the identical h-index, and the
+    fused program always stages the segment arrays).
     """
+    use_fused = config.fused if fused is None else fused
+    if use_fused and config.mode != "jacobi":
+        raise ValueError("fused=True requires mode='jacobi' "
+                         f"(got {config.mode!r})")
+    compiles0 = compile_count()
     n = g.n
     if n == 0:
         return KCoreResult(core=np.zeros(0, np.int32), rounds=0,
@@ -379,7 +401,24 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig()
     active = [n, int((g.deg > 0).sum())]
     changed_counts = [n]
 
-    if config.backend == "segment" and config.mode == "jacobi":
+    if use_fused:
+        from repro.core.runtime import fused_converge_dense
+
+        # from-scratch seeding: est = degrees, frontier = every vertex —
+        # round 1 of the fused loop IS round 1 of the host loop, and the
+        # recv-masked rounds after it are exact for the monotone locality
+        # operator (an inactive vertex's inputs are unchanged)
+        outcome = fused_converge_dense(
+            g.deg, np.ones(n, bool), g.src, g.dst,
+            np.ones(g.num_arcs, bool), g.deg,
+            n=n, n_iters=n_iters, max_rounds=max_rounds)
+        rounds, converged = outcome.rounds, outcome.converged
+        msgs.extend(outcome.msgs.tolist())
+        changed_counts.extend(outcome.changed.tolist())
+        active.extend(outcome.recv.tolist())
+        core = outcome.est
+
+    elif config.backend == "segment" and config.mode == "jacobi":
         est = jnp.asarray(g.deg, jnp.int32)
         src = jnp.asarray(g.src, jnp.int32)
         dst = jnp.asarray(g.dst, jnp.int32)
@@ -451,7 +490,8 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig()
         changed_per_round=np.asarray(changed_counts[: len(msgs)], np.int64),
     )
     return KCoreResult(core=core, rounds=rounds, converged=converged,
-                       stats=stats)
+                       stats=stats,
+                       recompiles=compile_count() - compiles0)
 
 
 def _receivers_arrays(n: int, src: np.ndarray, dst: np.ndarray,
@@ -578,42 +618,65 @@ def make_sharded_superstep(sg: ShardedGraph, mesh: jax.sharding.Mesh,
 
 def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
                             axis_names: Sequence[str],
-                            max_rounds: int | None = None) -> KCoreResult:
-    """Run the sharded engine to convergence (works on any mesh incl. 1 dev)."""
+                            max_rounds: int | None = None,
+                            fused: bool = False) -> KCoreResult:
+    """Run the sharded engine to convergence (works on any mesh incl. 1 dev).
+
+    With ``fused=True`` the whole round loop nests the masked shard_map
+    superstep inside one device-resident ``lax.while_loop`` (the shared
+    fused runtime, core/runtime.py): per-round cross-device traffic only,
+    no host round-trips, accounting bit-equal to the host loop.
+    """
     from repro.graph.partition import shard_graph
 
+    compiles0 = compile_count()
     n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
     sg = shard_graph(g, n_dev)
     n_iters = _bs_iters(g.max_deg)
-    superstep, _ = make_sharded_superstep(sg, mesh, axis_names, n_iters)
-    superstep = jax.jit(superstep)
-
-    est = jnp.asarray(sg.deg, jnp.int32)
-    src = jnp.asarray(sg.src)
-    dst = jnp.asarray(sg.dst)
-    amask = jnp.asarray(sg.arc_mask)
-    deg = jnp.asarray(sg.deg)
 
     deg64 = g.deg.astype(np.int64)
     msgs = [int(deg64.sum())]
     active = [g.n, int((g.deg > 0).sum())]
     changed_counts = [g.n]
-    rounds, converged = 0, False
     cap = max_rounds if max_rounds is not None else g.n + 1
-    while rounds < cap:
-        new_est, m, any_ch = superstep(est, src, dst, amask, deg)
-        rounds += 1
-        if not bool(any_ch):
-            converged = True
-            break
-        ch_real = np.asarray(new_est < est).reshape(-1)[: g.n]
-        msgs.append(int(m))
-        changed_counts.append(int(ch_real.sum()))
-        active.append(int(_receivers_np(g, ch_real).sum()))
-        est = new_est
-    core = np.asarray(est).reshape(-1)[: g.n].astype(np.int32)
+
+    if fused:
+        from repro.core.runtime import fused_converge_sharded
+
+        outcome = fused_converge_sharded(
+            g.deg, np.ones(g.n, bool), sg, mesh, tuple(axis_names),
+            n=g.n, n_iters=n_iters, max_rounds=cap)
+        rounds, converged = outcome.rounds, outcome.converged
+        msgs.extend(outcome.msgs.tolist())
+        changed_counts.extend(outcome.changed.tolist())
+        active.extend(outcome.recv.tolist())
+        core = outcome.est
+    else:
+        superstep, _ = make_sharded_superstep(sg, mesh, axis_names, n_iters)
+        superstep = jax.jit(superstep)
+
+        est = jnp.asarray(sg.deg, jnp.int32)
+        src = jnp.asarray(sg.src)
+        dst = jnp.asarray(sg.dst)
+        amask = jnp.asarray(sg.arc_mask)
+        deg = jnp.asarray(sg.deg)
+
+        rounds, converged = 0, False
+        while rounds < cap:
+            new_est, m, any_ch = superstep(est, src, dst, amask, deg)
+            rounds += 1
+            if not bool(any_ch):
+                converged = True
+                break
+            ch_real = np.asarray(new_est < est).reshape(-1)[: g.n]
+            msgs.append(int(m))
+            changed_counts.append(int(ch_real.sum()))
+            active.append(int(_receivers_np(g, ch_real).sum()))
+            est = new_est
+        core = np.asarray(est).reshape(-1)[: g.n].astype(np.int32)
     stats = MessageStats(np.asarray(msgs, np.int64),
                          np.asarray(active[: len(msgs)], np.int64),
                          np.asarray(changed_counts[: len(msgs)], np.int64))
     return KCoreResult(core=core, rounds=rounds, converged=converged,
-                       stats=stats)
+                       stats=stats,
+                       recompiles=compile_count() - compiles0)

@@ -1,0 +1,116 @@
+"""Shared fused convergence runtime — one layer, both engines.
+
+The device-resident ``lax.while_loop`` programs (``core.kcore.fused_convergence``
+and its nested-shard_map sibling) were born in the streaming engine (ISSUE 4);
+this module lifts their host-side orchestration — staging/padding inputs,
+dispatching the right fused program, reconstructing exact per-round
+``MessageStats`` arrays from the device stat buffers — into a runtime that
+BOTH engines call:
+
+* ``kcore_decompose(..., fused=True)`` / ``kcore_decompose_sharded(...,
+  fused=True)`` run the paper's from-scratch decomposition as one jitted
+  while_loop (seed = degrees, frontier = everyone);
+* ``StreamingKCoreEngine`` (frontier ``fused`` / ``fused_sharded``) runs each
+  churn-batch re-convergence the same way (seed = warm-start bound, frontier
+  = the batch's touched set).
+
+The contract either way: the returned accounting is bit-equal to what the
+host-loop modes would have appended round by round (BZ-verified and
+hypothesis-tested), so fusing is purely an execution-placement choice —
+never an accounting one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kcore import (
+    _fused_sharded_convergence,
+    fused_convergence,
+    fused_round_stats,
+)
+
+
+@dataclasses.dataclass
+class FusedOutcome:
+    """Host-side result of one fused convergence run.
+
+    ``msgs`` / ``changed`` / ``recv`` cover exactly the PRODUCTIVE rounds —
+    the arrays a host round loop would have appended — while ``rounds``
+    counts every executed superstep including the final unproductive one
+    (the host-loop convention).
+    """
+
+    est: np.ndarray  # (n,) int32 final estimates (exact cores on convergence)
+    rounds: int
+    converged: bool
+    msgs: np.ndarray  # (k,) int64 messages per productive round
+    changed: np.ndarray  # (k,) int64 senders per productive round
+    recv: np.ndarray  # (k,) int64 receivers per productive round
+
+
+def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, max_rounds):
+    """Single-device fused convergence over (padded) arc arrays.
+
+    ``src``/``dst``/``arc_mask`` may be numpy or already-device arrays; the
+    streaming engine passes its pow2 high-water padded CSR slots, the static
+    engine the plain sorted-COO arrays (every arc live).
+    """
+    est_j, r, stop, final_act, mb, cb, rb = fused_convergence(
+        jnp.asarray(seed, jnp.int32),
+        jnp.asarray(src, jnp.int32),
+        jnp.asarray(dst, jnp.int32),
+        jnp.asarray(arc_mask),
+        jnp.asarray(active),
+        jnp.asarray(deg, jnp.int32),
+        n=n,
+        n_iters=n_iters,
+        max_rounds=max_rounds,
+    )
+    _k, m_r, c_r, r_r, converged = fused_round_stats(r, stop, final_act, mb, cb, rb)
+    return FusedOutcome(
+        est=np.asarray(est_j, np.int32),
+        rounds=int(r),
+        converged=converged,
+        msgs=m_r,
+        changed=c_r,
+        recv=r_r,
+    )
+
+
+def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, max_rounds):
+    """Fused convergence with the masked shard_map superstep nested inside.
+
+    ``sg`` is a ``repro.graph.partition.ShardedGraph`` (from ``shard_graph``
+    for the static engine, ``shard_arc_arrays`` over live CSR slots for the
+    streaming engine); ``seed``/``active`` are plain (n,) host vectors and
+    are padded/reshaped to the shard layout here.
+    """
+    prog = _fused_sharded_convergence(
+        mesh, tuple(axis_names), sg.verts_per_shard, n_iters, max_rounds
+    )
+    n_dev, V = sg.n_shards, sg.verts_per_shard
+    est_p = np.zeros(sg.n_pad, np.int32)
+    est_p[:n] = seed
+    act_p = np.zeros(sg.n_pad, bool)
+    act_p[:n] = active
+    est_j, r, stop, final_act, mb, cb, rb = prog(
+        jnp.asarray(est_p.reshape(n_dev, V)),
+        jnp.asarray(sg.src),
+        jnp.asarray(sg.dst),
+        jnp.asarray(sg.arc_mask),
+        jnp.asarray(sg.deg),
+        jnp.asarray(act_p.reshape(n_dev, V)),
+    )
+    _k, m_r, c_r, r_r, converged = fused_round_stats(r, stop, final_act, mb, cb, rb)
+    return FusedOutcome(
+        est=np.asarray(est_j).reshape(-1)[:n].astype(np.int32),
+        rounds=int(r),
+        converged=converged,
+        msgs=m_r,
+        changed=c_r,
+        recv=r_r,
+    )

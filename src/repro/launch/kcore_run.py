@@ -3,56 +3,101 @@
     PYTHONPATH=src python -m repro.launch.kcore_run --graph FC --scale 0.2
     PYTHONPATH=src python -m repro.launch.kcore_run --graph chain --n 2000
     PYTHONPATH=src python -m repro.launch.kcore_run --graph FC --mode block_gs
+    PYTHONPATH=src python -m repro.launch.kcore_run --graph FC --fused
+    PYTHONPATH=src python -m repro.launch.kcore_run --graph ba --mesh 4 --fused
 
 Prints the paper's measurement set: total messages, messages/active nodes
 per round, rounds to convergence, work bound, heartbeat-model overhead, and
 the simulated-network runtime — plus validation vs the BZ oracle.
+
+``--fused`` runs the whole round loop as ONE device-resident
+``lax.while_loop`` (the shared fused runtime, repro/core/runtime.py) with
+bit-equal message accounting; ``--mesh N`` runs the sharded engine on an
+N-device ("data",) mesh (forced host devices when the platform has fewer —
+the flag must precede the first jax import, so mesh runs defer all jax
+imports like kcore_serve does). The two compose: ``--mesh N --fused`` nests
+the masked shard_map superstep inside the while_loop.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 
-from repro.core import (KCoreConfig, bz_core_numbers, kcore_decompose,
-                        work_bound)
-from repro.core.cost_model import DATACENTER, INTERNET, TPU_POD, \
-    simulate_runtime
-from repro.core.messages import heartbeat_overhead
-from repro.graph import generators
+def parse_args() -> argparse.Namespace:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="FC", help="SNAP abbrev (Table I) or chain/ba/er")
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", default="jacobi", choices=["jacobi", "block_gs"])
+    ap.add_argument("--backend", default="segment", choices=["segment", "ell", "ell_pallas"])
+    ap.add_argument(
+        "--fused",
+        action="store_true",
+        help="run the round loop as one device-resident while_loop "
+        "(jacobi only; accounting bit-equal to the host loop)",
+    )
+    ap.add_argument(
+        "--mesh",
+        type=int,
+        default=0,
+        metavar="N",
+        help="run the sharded engine on an N-device ('data',) mesh "
+        "(forces N host devices when the platform has fewer)",
+    )
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    if args.mesh and (args.mode != "jacobi" or args.backend != "segment"):
+        # the sharded engine is jacobi/segment only; refuse rather than
+        # silently running (and reporting) a different mode than asked
+        ap.error("--mesh supports --mode jacobi --backend segment only")
+    return args
 
 
-def build_graph(args):
+def build_graph(args, generators):
     if args.graph == "chain":
         return generators.chain(args.n)
     if args.graph == "ba":
         return generators.barabasi_albert(args.n, 4, seed=args.seed)
     if args.graph == "er":
         return generators.erdos_renyi(args.n, 4 * args.n, seed=args.seed)
-    return generators.snap_analogue(args.graph, scale=args.scale,
-                                    seed=args.seed)
+    return generators.snap_analogue(args.graph, scale=args.scale, seed=args.seed)
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--graph", default="FC",
-                    help="SNAP abbrev (Table I) or chain/ba/er")
-    ap.add_argument("--scale", type=float, default=0.2)
-    ap.add_argument("--n", type=int, default=1000)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--mode", default="jacobi",
-                    choices=["jacobi", "block_gs"])
-    ap.add_argument("--backend", default="segment",
-                    choices=["segment", "ell", "ell_pallas"])
-    ap.add_argument("--json", action="store_true")
-    args = ap.parse_args()
+    args = parse_args()
+    if args.mesh:
+        # must precede the first jax import anywhere in the process
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={args.mesh}"
+        ).strip()
 
-    g = build_graph(args)
+    from repro.core import (
+        KCoreConfig,
+        bz_core_numbers,
+        kcore_decompose,
+        kcore_decompose_sharded,
+        work_bound,
+    )
+    from repro.core.cost_model import DATACENTER, INTERNET, TPU_POD, simulate_runtime
+    from repro.core.messages import heartbeat_overhead
+    from repro.graph import generators
+
+    g = build_graph(args, generators)
     t0 = time.perf_counter()
-    res = kcore_decompose(g, KCoreConfig(mode=args.mode,
-                                         backend=args.backend))
+    if args.mesh:
+        from repro.distribution.compat import make_mesh
+
+        mesh = make_mesh((args.mesh,), ("data",))
+        res = kcore_decompose_sharded(g, mesh, ("data",), fused=args.fused)
+    else:
+        config = KCoreConfig(mode=args.mode, backend=args.backend)
+        res = kcore_decompose(g, config, fused=args.fused)
     wall = time.perf_counter() - t0
 
     ref = bz_core_numbers(g)
@@ -60,12 +105,19 @@ def main() -> None:
     wb = work_bound(g, res.core)
     hb = heartbeat_overhead(res.stats)
     report = {
-        "graph": args.graph, "n": g.n, "m": g.m,
-        "avg_deg": round(g.avg_deg, 1), "max_deg": g.max_deg,
+        "graph": args.graph,
+        "n": g.n,
+        "m": g.m,
+        "avg_deg": round(g.avg_deg, 1),
+        "max_deg": g.max_deg,
         "max_core": int(res.core.max()) if g.n else 0,
-        "mode": args.mode, "backend": args.backend,
+        "mode": args.mode,
+        "backend": args.backend,
+        "fused": args.fused,
+        "mesh": args.mesh or 1,
         "correct_vs_BZ": ok,
-        "rounds": res.rounds, "converged": res.converged,
+        "rounds": res.rounds,
+        "converged": res.converged,
         "total_messages": res.stats.total_messages,
         "work_bound": wb,
         "messages_over_bound": round(res.stats.total_messages / max(wb, 1), 3),
@@ -73,9 +125,11 @@ def main() -> None:
         "active_per_round": res.stats.active_per_round.tolist()[:20],
         "heartbeats": hb["heartbeat_messages"],
         "wall_s": round(wall, 2),
+        "recompiles": res.recompiles,
         "simulated_runtime_s": {
             m.name: round(simulate_runtime(res.stats, m)["total_s"], 4)
-            for m in (INTERNET, DATACENTER, TPU_POD)},
+            for m in (INTERNET, DATACENTER, TPU_POD)
+        },
     }
     if args.json:
         print(json.dumps(report, indent=1))

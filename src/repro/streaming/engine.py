@@ -17,11 +17,14 @@ Seeding rules (all sound, proofs in the docstrings below):
     anchored at inserted edges, pruned by a support peel
     (see ``_insertion_upper_bound``). The passes run as ONE jitted device
     program (``_ub_converge``), so seed cost is a single dispatch;
-  * BULK batches (insert count >= ``bulk_seed_frac`` of the post-batch
-    edges) skip the tight bound and seed straight from degrees — sound by
-    definition, and cheaper in wall time than a tight bound whose pass
-    count grows with the core raise (the fused loop absorbs the extra
-    rounds on device). Small-churn batches never take this path.
+  * a per-batch COST MODEL (``repro.core.cost_model.choose_seed``) picks
+    between the tight bound and a plain degree seed (sound by definition:
+    deg >= core): estimated +1 passes x per-pass cost vs the extra fused
+    rounds a degree seed costs. Bulk loads whose cores rise by many levels
+    (a window filling from empty) seed from degrees; mid-churn batches
+    whose cores barely move keep the low-message tight bound even when
+    their insert fraction is large — the wall cliff of the old 25%-churn
+    step function without giving up the message story.
 
 The graph itself lives in a slack-padded in-place CSR (streaming/delta.py
 ``PatchableCSR``): a batch patches arc slots instead of rebuilding the
@@ -72,14 +75,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.cost_model import SeedCostModel, choose_seed
 from repro.core.jit_telemetry import compile_count
-from repro.core.kcore import (KCoreConfig, _bs_iters,
-                              _fused_sharded_convergence, _hindex_by_bsearch,
-                              _receivers_arrays, fused_convergence,
-                              fused_round_stats, kcore_decompose,
+from repro.core.kcore import (KCoreConfig, _bs_iters, _hindex_by_bsearch,
+                              _receivers_arrays, kcore_decompose,
                               kcore_decompose_sharded,
                               make_sharded_superstep, masked_round_segment)
 from repro.core.messages import MessageStats
+from repro.core.runtime import fused_converge_dense, fused_converge_sharded
 from repro.graph.padding import next_pow2 as _next_pow2
 from repro.graph.padding import round_up as _round_up
 from repro.graph.structs import Graph
@@ -109,17 +112,16 @@ class StreamingConfig:
     # through every pow2 size on the way up (the windowed engine sets it
     # from the expected window size); 0 = grow organically
     min_arc_capacity: int = 0
-    # bulk-batch seeding policy: when a batch's effective insert count
-    # reaches this fraction of the POST-batch edge count, seed from plain
-    # degrees (always sound: deg >= core) instead of the subcore upper
-    # bound. The tight bound costs one +1 pass per unit of core raise —
-    # unbounded for bulk loads (a filling window raises cores by tens) —
-    # while the fused loop converges from degrees at a few hundred ms per
-    # round; for small churn (the streaming benchmark's 0.2-2%) the tight
-    # bound always wins and this never triggers. Trades seed-round
-    # messages for wall time on heavy batches ONLY; all frontier modes
-    # share the seed, so cross-mode bill equality is unaffected.
-    bulk_seed_frac: float = 0.25
+    # per-batch seeding policy (repro.core.cost_model.choose_seed): the
+    # tight subcore upper bound costs one +1 device pass per unit of core
+    # raise — unbounded for bulk loads (a filling window raises cores by
+    # tens) — while a plain degree seed (always sound: deg >= core) costs
+    # extra fused re-convergence rounds instead. The model compares the
+    # two in units of fused rounds and picks per batch; for small churn
+    # (the streaming benchmark's 0.2-2%) the tight bound always wins, so
+    # the incremental message story is unchanged. All frontier modes share
+    # the seed, so cross-mode bill equality is unaffected either way.
+    seed_model: SeedCostModel = SeedCostModel()
 
 
 @dataclasses.dataclass
@@ -135,6 +137,11 @@ class BatchResult:
     seed_changed: int         # vertices that had to rebroadcast at seed time
     mode: str = "dense"       # execution mode this batch actually ran in
     patch_s: float = 0.0      # host seconds spent patching the CSR in place
+    # warm-start seeding decision (repro.core.cost_model.choose_seed):
+    # "tight" = subcore upper bound, "degree" = plain degree seed, and the
+    # pass-count estimate the cost model based the choice on
+    seed_strategy: str = "tight"
+    seed_est_passes: int = 0
     # fresh XLA compilations this batch caused (process-wide; 0 = every
     # jitted program was a cache hit — the shape-stability signal)
     recompiles: int = 0
@@ -655,37 +662,20 @@ class StreamingKCoreEngine:
 
     def _run_fused(self, seed: np.ndarray, active: np.ndarray, n: int,
                    n_iters: int, cap: int, sharded: bool):
-        """One fused device-resident re-convergence (core.fused_convergence
-        or its nested-shard_map variant). Returns (core, rounds, converged,
-        msgs, changed, recv) with the three int64 arrays covering exactly
-        the productive rounds — the host-loop modes' accounting."""
-        csr = self._csr
+        """One fused device-resident re-convergence through the shared
+        runtime (core/runtime.py) — the same layer the static engine's
+        ``kcore_decompose(..., fused=True)`` calls. Returns a FusedOutcome
+        whose three int64 arrays cover exactly the productive rounds — the
+        host-loop modes' accounting."""
         if sharded:
             sg = self._shard_slots(n)
-            prog = _fused_sharded_convergence(self.mesh, self.axis_names,
-                                              sg.verts_per_shard, n_iters,
-                                              cap)
-            n_dev, V = sg.n_shards, sg.verts_per_shard
-            est_p = np.zeros(sg.n_pad, np.int32)
-            est_p[:n] = seed
-            act_p = np.zeros(sg.n_pad, bool)
-            act_p[:n] = active
-            est_j, r, stop, final_act, mb, cb, rb = prog(
-                jnp.asarray(est_p.reshape(n_dev, V)), jnp.asarray(sg.src),
-                jnp.asarray(sg.dst), jnp.asarray(sg.arc_mask),
-                jnp.asarray(sg.deg), jnp.asarray(act_p.reshape(n_dev, V)))
-            core = np.asarray(est_j).reshape(-1)[:n].astype(np.int32)
-        else:
-            src_j, dst_j, amask_j = (jnp.asarray(a) for a in
-                                     self._padded_slots())
-            est_j, r, stop, final_act, mb, cb, rb = fused_convergence(
-                jnp.asarray(seed), src_j, dst_j, amask_j,
-                jnp.asarray(active), jnp.asarray(csr.deg), n=n,
-                n_iters=n_iters, max_rounds=cap)
-            core = np.asarray(est_j, np.int32)
-        _k, m_r, c_r, r_r, converged = fused_round_stats(r, stop, final_act,
-                                                         mb, cb, rb)
-        return core, int(r), converged, m_r, c_r, r_r
+            return fused_converge_sharded(seed, active, sg, self.mesh,
+                                          self.axis_names, n=n,
+                                          n_iters=n_iters, max_rounds=cap)
+        src_p, dst_p, amask_p = self._padded_slots()
+        return fused_converge_dense(seed, active, src_p, dst_p, amask_p,
+                                    self._csr.deg, n=n, n_iters=n_iters,
+                                    max_rounds=cap)
 
     # ------------------------------------------------------------------ #
     def apply_batch(self, batch: EdgeBatch) -> BatchResult:
@@ -702,10 +692,10 @@ class StreamingKCoreEngine:
 
         old_core_ext = np.zeros(n, np.int64)
         old_core_ext[: self.core.shape[0]] = self.core
-        ins_count = int(delta.inserted.shape[0])
-        if ins_count and ins_count >= self.config.bulk_seed_frac * max(
-                csr.m, 1):
-            # bulk load: degree seed (see StreamingConfig.bulk_seed_frac)
+        seed_choice = choose_seed(delta.inserted, csr.deg, old_core_ext,
+                                  model=self.config.seed_model)
+        if seed_choice.strategy == "degree":
+            # bulk load: degree seed (see StreamingConfig.seed_model)
             U = deg64.copy()
         else:
             src_p, dst_p, live_p = self._padded_slots()
@@ -752,12 +742,13 @@ class StreamingKCoreEngine:
 
         if mode in ("fused", "fused_sharded"):
             if active.any():
-                core, rounds, converged, m_r, c_r, r_r = self._run_fused(
-                    seed, active, n, n_iters, cap,
-                    sharded=mode == "fused_sharded")
-                msgs.extend(m_r.tolist())
-                changed_counts.extend(c_r.tolist())
-                actives.extend(r_r.tolist())
+                outcome = self._run_fused(seed, active, n, n_iters, cap,
+                                          sharded=mode == "fused_sharded")
+                core, rounds = outcome.est, outcome.rounds
+                converged = outcome.converged
+                msgs.extend(outcome.msgs.tolist())
+                changed_counts.extend(outcome.changed.tolist())
+                actives.extend(outcome.recv.tolist())
             else:
                 core, converged = np.asarray(seed, np.int32), True
         else:
@@ -790,6 +781,8 @@ class StreamingKCoreEngine:
                            region_size=int(region.sum()),
                            seed_changed=int(seed_changed.sum()),
                            mode=mode, patch_s=patch_s,
+                           seed_strategy=seed_choice.strategy,
+                           seed_est_passes=seed_choice.est_passes,
                            recompiles=compile_count() - compiles0,
                            csr_compactions=int(csr.compactions),
                            csr_dead_frac=csr.dead / cap_slots,

@@ -1,0 +1,103 @@
+"""Cost-model seed selection (ISSUE 5): the per-batch choice between the
+tight subcore upper bound and a plain degree seed
+(repro.core.cost_model.choose_seed) — which replaced the old 25%-churn
+``bulk_seed_frac`` step function. Both seeds are sound, so these tests pin
+the DECISION (and its telemetry) at the old step-function boundary: bulk
+loads whose cores rise by many levels pick degrees, mid-churn batches whose
+cores barely move keep the tight bound even when their insert fraction is
+far past 25%, and the engine stays BZ-exact either way."""
+
+import numpy as np
+
+from repro.core import bz_core_numbers
+from repro.core.cost_model import (SeedCostModel, choose_seed,
+                                   estimate_ub_passes)
+from repro.graph import generators as gen
+from repro.graph.structs import Graph
+from repro.streaming import EdgeBatch, StreamingKCoreEngine
+
+MODEL = SeedCostModel()  # defaults: degree wins iff est_passes > 6
+
+
+def _star_batch(hub_edges):
+    """(b, 2) inserts all incident to vertex 0."""
+    return np.asarray([(0, i + 1) for i in range(hub_edges)], np.int64)
+
+
+def test_estimate_passes_empty_and_capped():
+    deg = np.array([5, 5, 5], np.int64)
+    core = np.zeros(3, np.int64)
+    assert estimate_ub_passes(np.zeros((0, 2), np.int64), deg, core) == 0
+    # a single inserted edge can raise cores by at most 1 (subcore theorem)
+    one = np.asarray([[0, 1]], np.int64)
+    assert estimate_ub_passes(one, deg, core) == 1
+
+
+def test_estimate_passes_headroom_capped():
+    # vertex 0 takes 5 inserts but its core already equals deg - 1: the
+    # headroom (deg - old_core), not the insert count, bounds the raise
+    ins = _star_batch(5)
+    deg = np.array([10, 3, 3, 3, 3, 3], np.int64)
+    core = np.array([9, 1, 1, 1, 1, 1], np.int64)
+    assert estimate_ub_passes(ins, deg, core) == 1
+
+
+def test_choice_boundary_default_model():
+    """Default model: degree iff est_passes > (16 - 4) / 2 = 6."""
+    deg = np.full(10, 20, np.int64)
+    core = np.zeros(10, np.int64)
+    six = choose_seed(_star_batch(6), deg, core, MODEL)
+    seven = choose_seed(_star_batch(7), deg, core, MODEL)
+    assert six.strategy == "tight" and six.est_passes == 6
+    assert seven.strategy == "degree" and seven.est_passes == 7
+    assert seven.tight_cost > seven.degree_cost
+    assert six.tight_cost <= six.degree_cost
+
+
+def test_mid_churn_spread_batch_stays_tight():
+    """A >25% insert fraction whose per-vertex raise potential is ~1 (the
+    old step function's wall cliff) now keeps the tight bound."""
+    n = 40
+    deg = np.full(n, 3, np.int64)
+    core = np.full(n, 2, np.int64)
+    # 20 inserts, each on distinct endpoints: ins_deg <= 1 everywhere
+    ins = np.asarray([(2 * i, 2 * i + 1) for i in range(n // 2)], np.int64)
+    choice = choose_seed(ins, deg, core, MODEL)
+    assert choice.strategy == "tight"
+    assert choice.est_passes <= 1
+
+
+def test_engine_bulk_fill_picks_degree_seed():
+    """A window filling from empty is the canonical bulk load: every
+    vertex's core rises by many levels, the model must pick degrees."""
+    eng = StreamingKCoreEngine(Graph.from_edges(np.zeros((0, 2)), n=10))
+    iu = np.triu_indices(10, k=1)
+    res = eng.apply_batch(EdgeBatch.make(insert=np.stack(iu, axis=1)))
+    assert res.seed_strategy == "degree"
+    assert res.seed_est_passes > 6
+    assert (res.core == 9).all()
+    assert (res.core == bz_core_numbers(eng.graph)).all()
+
+
+def test_engine_mid_churn_picks_tight_seed():
+    """~33% insert fraction, spread so no core moves much: the old step
+    function would have taken the degree-seed wall cliff; the cost model
+    keeps the tight bound and the low message bill."""
+    g = gen.cycle(30)
+    eng = StreamingKCoreEngine(g)
+    chords = np.asarray([(i, i + 15) for i in range(15)], np.int64)
+    res = eng.apply_batch(EdgeBatch.make(insert=chords))
+    assert res.seed_strategy == "tight"
+    assert res.seed_est_passes <= 2
+    assert (res.core == bz_core_numbers(eng.graph)).all()
+
+
+def test_engine_delete_only_batch_is_tight_with_zero_passes():
+    g = gen.barabasi_albert(60, 3, seed=4)
+    eng = StreamingKCoreEngine(g)
+    from repro.streaming import canonical_edges
+
+    res = eng.apply_batch(EdgeBatch.make(delete=canonical_edges(g)[:5]))
+    assert res.seed_strategy == "tight"
+    assert res.seed_est_passes == 0
+    assert (res.core == bz_core_numbers(eng.graph)).all()

@@ -24,6 +24,13 @@ res = kcore_decompose_sharded(g, mesh, {axes})
 ref = kcore_decompose(g)
 assert (res.core == bz_core_numbers(g)).all(), "core mismatch"
 assert res.stats.total_messages == ref.stats.total_messages, "msg mismatch"
+fus = kcore_decompose_sharded(g, mesh, {axes}, fused=True)
+assert (fus.core == ref.core).all(), "fused core mismatch"
+assert (fus.stats.messages_per_round
+        == ref.stats.messages_per_round).all(), "fused msg mismatch"
+assert (fus.stats.active_per_round
+        == ref.stats.active_per_round).all(), "fused active mismatch"
+assert fus.rounds == ref.rounds, "fused rounds mismatch"
 print(json.dumps({{"rounds": res.rounds,
                    "messages": int(res.stats.total_messages)}}))
 """
@@ -35,8 +42,9 @@ print(json.dumps({{"rounds": res.rounds,
     (8, (2, 2, 2), ("pod", "data", "model")),
 ])
 def test_sharded_kcore_multidevice(ndev, mesh_shape, axes):
-    """Sharded engine: identical cores AND identical message counts to the
-    single-device run, on 1-, 2- and 3-axis meshes."""
+    """Sharded engine (host loop AND static fused while_loop): identical
+    cores and message accounting to the single-device run, on 1-, 2- and
+    3-axis meshes."""
     script = _SCRIPT.format(ndev=ndev, mesh_shape=mesh_shape,
                             axes=tuple(axes), naxes=len(axes))
     proc = subprocess.run(
