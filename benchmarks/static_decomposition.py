@@ -34,6 +34,7 @@ import numpy as np
 
 from benchmarks.common import SCALE, csv_row, graph_for
 from repro.core import bz_core_numbers, kcore_decompose, work_bound
+from repro.core.messages import heartbeat_overhead
 
 GRAPHS = tuple(os.environ.get("REPRO_STATIC_BENCH_GRAPHS", "EEN,G31,FC,PTBR,MGF").split(","))
 
@@ -51,6 +52,10 @@ COLUMNS = (
     "fused_cold_ms",
     "fused_ms",
     "fused_ms_per_round",
+    "device_ms",
+    "reconstruct_ms",
+    "compile_s",
+    "heartbeats",
     "recompiles",
     "speedup",
     "bit_equal",
@@ -115,6 +120,13 @@ def run_records() -> list[dict]:
                 "fused_cold_ms": round(fused_cold_s * 1e3, 3),
                 "fused_ms": round(fused_s * 1e3, 3),
                 "fused_ms_per_round": round(fused_s * 1e3 / rounds, 3),
+                # warm fused phase breakdown (KCoreResult.phase_s) and the
+                # wall XLA spent compiling for the COLD call
+                "device_ms": round(fused_warm.phase_s.get("device-converge", 0.0) * 1e3, 3),
+                "reconstruct_ms": round(fused_warm.phase_s.get("host-reconstruct", 0.0) * 1e3, 3),
+                "compile_s": round(fused.compile_s, 3),
+                # modeled termination-detection bill (§III.C heartbeats)
+                "heartbeats": int(heartbeat_overhead(host.stats)["heartbeat_messages"]),
                 "recompiles": fused.recompiles,
                 "speedup": round(host_s / max(fused_s, 1e-9), 2),
                 "bit_equal": bit_equal,

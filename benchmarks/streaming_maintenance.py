@@ -35,6 +35,7 @@ import numpy as np
 
 from benchmarks.common import csv_row
 from repro.core import bz_core_numbers, kcore_decompose
+from repro.core.messages import heartbeat_overhead
 from repro.graph import generators as gen
 from repro.streaming import (StreamingConfig, StreamingKCoreEngine,
                              apply_batch, random_churn_batch)
@@ -47,7 +48,8 @@ BATCHES = int(os.environ.get("REPRO_STREAM_BENCH_BATCHES", "5"))
 
 COLUMNS = ("graph", "n", "m", "churn", "batch", "inserted", "deleted",
            "inc_messages", "scratch_messages", "ratio", "inc_rounds",
-           "scratch_rounds", "region", "mode", "patch_ms", "rebuild_ms",
+           "scratch_rounds", "region", "mode", "patch_ms", "seed_ms",
+           "converge_ms", "reconstruct_ms", "rebuild_ms", "heartbeats",
            "recompiles", "compactions", "dead_frac", "occupancy",
            "sharded_ok", "oracle_ok")
 
@@ -108,8 +110,17 @@ def run_records() -> list[dict]:
                     "scratch_rounds": scratch.rounds,
                     "region": res.region_size,
                     "mode": res.mode,
+                    # per-phase breakdown of the incremental batch (engine-
+                    # measured walls; same boundaries as the trace spans)
                     "patch_ms": round(res.patch_s * 1e3, 3),
+                    "seed_ms": round(res.seed_s * 1e3, 3),
+                    "converge_ms": round(res.converge_s * 1e3, 3),
+                    "reconstruct_ms": round(res.reconstruct_s * 1e3, 3),
                     "rebuild_ms": round(rebuild_s * 1e3, 3),
+                    # modeled termination-detection bill (§III.C heartbeat
+                    # model at round granularity) for this batch
+                    "heartbeats": int(heartbeat_overhead(
+                        res.stats)["heartbeat_messages"]),
                     # jit-recompile telemetry (dense-side engine; 0 = all
                     # programs were cache hits this batch)
                     "recompiles": res.recompiles,
@@ -132,8 +143,12 @@ def summarize(records: list[dict]) -> dict:
         "mean_ratio": round(float(np.mean([r["ratio"] for r in rs])), 4),
         "mean_patch_ms": round(float(np.mean([r["patch_ms"] for r in rs])),
                                3),
+        "mean_seed_ms": round(float(np.mean([r["seed_ms"] for r in rs])), 3),
+        "mean_converge_ms": round(float(np.mean([r["converge_ms"]
+                                                 for r in rs])), 3),
         "mean_rebuild_ms": round(float(np.mean([r["rebuild_ms"]
                                                 for r in rs])), 3),
+        "total_heartbeats": int(np.sum([r["heartbeats"] for r in rs])),
         "compactions": int(rs[-1]["compactions"]),
         "mean_occupancy": round(float(np.mean([r["occupancy"]
                                                for r in rs])), 4),

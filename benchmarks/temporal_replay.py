@@ -63,8 +63,9 @@ BA_REMOVE_FRAC = 0.1
 
 COLUMNS = ("trace", "n", "events", "window", "stride", "step", "m",
            "inserted", "deleted", "messages", "scratch_messages", "ratio",
-           "rounds", "frontier_peak", "mode", "patch_ms", "step_ms",
-           "ms_per_round", "recompiles", "compactions", "dead_frac",
+           "rounds", "frontier_peak", "mode", "patch_ms", "seed_ms",
+           "converge_ms", "reconstruct_ms", "step_ms", "ms_per_round",
+           "heartbeats", "recompiles", "compactions", "dead_frac",
            "occupancy", "core_max", "oracle_ok")
 
 
@@ -124,8 +125,15 @@ def run_records() -> list[dict]:
                 "ratio": round(rec.messages / max(scratch_msgs, 1), 4),
                 "rounds": rec.rounds, "frontier_peak": rec.frontier_peak,
                 "mode": rec.mode, "patch_ms": rec.patch_ms,
+                # per-phase breakdown of each advance (engine-measured,
+                # same boundaries as the trace spans)
+                "seed_ms": rec.seed_ms,
+                "converge_ms": rec.converge_ms,
+                "reconstruct_ms": rec.reconstruct_ms,
                 "step_ms": rec.step_ms,
                 "ms_per_round": round(rec.step_ms / max(rec.rounds, 1), 3),
+                # modeled termination-detection bill (§III.C) per advance
+                "heartbeats": rec.heartbeats,
                 "recompiles": rec.recompiles,
                 "compactions": rec.csr_compactions,
                 "dead_frac": rec.csr_dead_frac,
@@ -147,8 +155,12 @@ def summarize(records: list[dict]) -> dict:
                                               for r in rs])), 1),
         "mean_patch_ms": round(float(np.mean([r["patch_ms"]
                                               for r in rs])), 3),
+        "mean_seed_ms": round(float(np.mean([r["seed_ms"] for r in rs])), 3),
+        "mean_converge_ms": round(float(np.mean([r["converge_ms"]
+                                                 for r in rs])), 3),
         "mean_ms_per_round": round(float(np.mean([r["ms_per_round"]
                                                   for r in rs])), 3),
+        "total_heartbeats": int(np.sum([r["heartbeats"] for r in rs])),
         "recompiles": int(np.sum([r["recompiles"] for r in rs])),
         "compactions": int(rs[-1]["compactions"]),
     } for trace, rs in out.items()}

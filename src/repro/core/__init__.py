@@ -3,7 +3,7 @@ composable JAX module, with exact message accounting, termination-detection
 models, and a simulated-network cost model."""
 
 from repro.core.bz import bz_core_numbers, max_core
-from repro.core.jit_telemetry import compile_count
+from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.kcore import (
     KCoreConfig,
     KCoreResult,
@@ -32,6 +32,7 @@ __all__ = [
     "bz_core_numbers",
     "max_core",
     "compile_count",
+    "compile_seconds",
     "KCoreConfig",
     "KCoreResult",
     "fused_convergence",

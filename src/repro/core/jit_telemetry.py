@@ -8,6 +8,15 @@ event per program XLA actually compiles, so the delta of
 ``compile_count()`` across a batch/step/replay IS the number of fresh
 compiled signatures it minted (0 = every program was a cache hit).
 
+The same event carries the compile DURATION (jax.monitoring calls the
+listener as ``listener(event, duration_secs)``), so the listener also
+accumulates ``compile_seconds()`` — the wall-clock XLA spent compiling —
+and, when span tracing is live (repro.obs.trace), records each compile as
+an ``xla.compile`` span ending at the current clock, which lands it inside
+whatever engine span was open while the compile ran. That is how a trace
+attributes "this batch was slow because it minted a fresh program" to the
+exact batch/phase that paid for it.
+
 The listener registers lazily on first use and is a no-op counter bump,
 so leaving it installed costs nothing. On a jax that stops emitting the
 event (none known across 0.4.x..current), counts degrade to 0 rather
@@ -17,13 +26,28 @@ than erroring — telemetry must never take down the engine.
 from __future__ import annotations
 
 _count = 0
+_seconds = 0.0
 _installed = False
 
 
 def _on_duration(event: str, *args, **kwargs) -> None:
-    global _count
+    global _count, _seconds
     if "backend_compile" in event:
         _count += 1
+        dur = 0.0
+        if args:
+            try:
+                dur = float(args[0])
+            except (TypeError, ValueError):
+                pass
+        _seconds += dur
+        try:
+            from repro.obs import trace
+
+            if trace.enabled():
+                trace.record("xla.compile", dur, event=event)
+        except Exception:
+            pass  # tracing must never take down a compile
 
 
 def install() -> None:
@@ -47,3 +71,14 @@ def compile_count() -> int:
     """
     install()
     return _count
+
+
+def compile_seconds() -> float:
+    """Monotone wall-clock seconds XLA spent compiling since install.
+
+    Diff two snapshots to attribute compile time to a region of code —
+    the duration-valued sibling of ``compile_count()`` (the listener
+    always received the durations; it used to discard them).
+    """
+    install()
+    return _seconds

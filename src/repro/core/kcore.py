@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -41,8 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.jit_telemetry import compile_count
+from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.messages import MessageStats
+from repro.obs import trace as _trace
 from repro.graph.partition import ShardedGraph
 from repro.graph.structs import EllGraph, Graph
 
@@ -75,6 +77,15 @@ class KCoreResult:
     # was a cache hit) — makes the fused path's O(log)-compiles claim
     # measurable in benchmarks/static_decomposition.py
     recompiles: int = 0
+    # ... and the wall-clock XLA spent on those compiles (the duration-
+    # valued twin: jit_telemetry.compile_seconds delta)
+    compile_s: float = 0.0
+    # per-phase wall breakdown (seconds). Fused runs report the runtime's
+    # split: "device-converge" (the while_loop, blocked to completion) and
+    # "host-reconstruct" (stats recovery); host-loop runs report "converge"
+    # (the whole round loop). Always measured — two perf_counter pairs per
+    # DECOMPOSITION, not per round.
+    phase_s: dict = dataclasses.field(default_factory=dict)
 
 
 def _bs_iters(max_deg: int) -> int:
@@ -385,7 +396,19 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig(), *,
     if use_fused and config.mode != "jacobi":
         raise ValueError("fused=True requires mode='jacobi' "
                          f"(got {config.mode!r})")
-    compiles0 = compile_count()
+    with _trace.span("kcore.decompose", n=g.n, m=g.m, mode=config.mode,
+                     backend=config.backend, fused=bool(use_fused)) as _sp:
+        res = _decompose_body(g, config, use_fused)
+        _sp.set(rounds=res.rounds, messages=res.stats.total_messages,
+                converged=res.converged, recompiles=res.recompiles,
+                compile_s=round(res.compile_s, 6))
+    return res
+
+
+def _decompose_body(g: Graph, config: KCoreConfig,
+                    use_fused: bool) -> KCoreResult:
+    compiles0, csecs0 = compile_count(), compile_seconds()
+    phase_s: dict = {}
     n = g.n
     if n == 0:
         return KCoreResult(core=np.zeros(0, np.int32), rounds=0,
@@ -417,6 +440,8 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig(), *,
         changed_counts.extend(outcome.changed.tolist())
         active.extend(outcome.recv.tolist())
         core = outcome.est
+        phase_s["device-converge"] = outcome.device_s
+        phase_s["host-reconstruct"] = outcome.reconstruct_s
 
     elif config.backend == "segment" and config.mode == "jacobi":
         est = jnp.asarray(g.deg, jnp.int32)
@@ -424,18 +449,22 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig(), *,
         dst = jnp.asarray(g.dst, jnp.int32)
         amask = jnp.ones(g.num_arcs, bool)
         rounds, converged = 0, False
+        t_conv = time.perf_counter()
         while rounds < max_rounds:
-            new_est, changed, recv = _round_segment(est, src, dst, amask, n,
-                                                    n_iters)
-            rounds += 1
-            ch_np = np.asarray(changed)
-            if not ch_np.any():
-                converged = True
-                break
-            msgs.append(int(deg64[ch_np].sum()))
-            changed_counts.append(int(ch_np.sum()))
-            active.append(int(np.asarray(recv).sum()))
-            est = new_est
+            with _trace.span("kcore.round", round=rounds) as rsp:
+                new_est, changed, recv = _round_segment(est, src, dst, amask,
+                                                        n, n_iters)
+                rounds += 1
+                ch_np = np.asarray(changed)
+                if not ch_np.any():
+                    converged = True
+                    break
+                msgs.append(int(deg64[ch_np].sum()))
+                changed_counts.append(int(ch_np.sum()))
+                active.append(int(np.asarray(recv).sum()))
+                rsp.set(messages=msgs[-1], changed=changed_counts[-1])
+                est = new_est
+        phase_s["converge"] = time.perf_counter() - t_conv
         core = np.asarray(est, np.int32)
 
     elif config.backend in ("ell", "ell_pallas") and config.mode == "jacobi":
@@ -446,19 +475,22 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig(), *,
         est_ext = jnp.concatenate(
             [jnp.asarray(g.deg, jnp.int32), jnp.zeros(1, jnp.int32)])
         rounds, converged = 0, False
+        t_conv = time.perf_counter()
         while rounds < max_rounds:
-            new_ext, changed = round_fn(est_ext)
-            rounds += 1
-            ch_np = np.asarray(changed)
-            if not ch_np.any():
-                converged = True
-                break
-            msgs.append(int(deg64[ch_np].sum()))
-            changed_counts.append(int(ch_np.sum()))
-            # receivers: any vertex adjacent to a changed vertex
-            recv = _receivers_np(g, ch_np)
-            active.append(int(recv.sum()))
-            est_ext = new_ext
+            with _trace.span("kcore.round", round=rounds):
+                new_ext, changed = round_fn(est_ext)
+                rounds += 1
+                ch_np = np.asarray(changed)
+                if not ch_np.any():
+                    converged = True
+                    break
+                msgs.append(int(deg64[ch_np].sum()))
+                changed_counts.append(int(ch_np.sum()))
+                # receivers: any vertex adjacent to a changed vertex
+                recv = _receivers_np(g, ch_np)
+                active.append(int(recv.sum()))
+                est_ext = new_ext
+        phase_s["converge"] = time.perf_counter() - t_conv
         core = np.asarray(est_ext[:n], np.int32)
 
     elif config.mode == "block_gs":
@@ -467,17 +499,20 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig(), *,
         round_fn = _make_round_block_gs(sg, n_iters)
         est = jnp.asarray(sg.deg.reshape(-1), jnp.int32)
         rounds, converged = 0, False
+        t_conv = time.perf_counter()
         while rounds < max_rounds:
-            new_est, changed = round_fn(est)
-            rounds += 1
-            ch_real = np.asarray(changed)[: g.n]
-            if not ch_real.any():
-                converged = True
-                break
-            msgs.append(int(deg64[ch_real].sum()))
-            changed_counts.append(int(ch_real.sum()))
-            active.append(int(_receivers_np(g, ch_real).sum()))
-            est = new_est
+            with _trace.span("kcore.round", round=rounds):
+                new_est, changed = round_fn(est)
+                rounds += 1
+                ch_real = np.asarray(changed)[: g.n]
+                if not ch_real.any():
+                    converged = True
+                    break
+                msgs.append(int(deg64[ch_real].sum()))
+                changed_counts.append(int(ch_real.sum()))
+                active.append(int(_receivers_np(g, ch_real).sum()))
+                est = new_est
+        phase_s["converge"] = time.perf_counter() - t_conv
         core = np.asarray(est)[: g.n].astype(np.int32)
 
     else:
@@ -491,7 +526,9 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig(), *,
     )
     return KCoreResult(core=core, rounds=rounds, converged=converged,
                        stats=stats,
-                       recompiles=compile_count() - compiles0)
+                       recompiles=compile_count() - compiles0,
+                       compile_s=compile_seconds() - csecs0,
+                       phase_s=phase_s)
 
 
 def _receivers_arrays(n: int, src: np.ndarray, dst: np.ndarray,
@@ -629,7 +666,8 @@ def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
     """
     from repro.graph.partition import shard_graph
 
-    compiles0 = compile_count()
+    compiles0, csecs0 = compile_count(), compile_seconds()
+    phase_s: dict = {}
     n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
     sg = shard_graph(g, n_dev)
     n_iters = _bs_iters(g.max_deg)
@@ -640,43 +678,55 @@ def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
     changed_counts = [g.n]
     cap = max_rounds if max_rounds is not None else g.n + 1
 
-    if fused:
-        from repro.core.runtime import fused_converge_sharded
+    with _trace.span("kcore.decompose", n=g.n, m=g.m, mode="sharded",
+                     mesh_devices=n_dev, fused=bool(fused)) as _sp:
+        if fused:
+            from repro.core.runtime import fused_converge_sharded
 
-        outcome = fused_converge_sharded(
-            g.deg, np.ones(g.n, bool), sg, mesh, tuple(axis_names),
-            n=g.n, n_iters=n_iters, max_rounds=cap)
-        rounds, converged = outcome.rounds, outcome.converged
-        msgs.extend(outcome.msgs.tolist())
-        changed_counts.extend(outcome.changed.tolist())
-        active.extend(outcome.recv.tolist())
-        core = outcome.est
-    else:
-        superstep, _ = make_sharded_superstep(sg, mesh, axis_names, n_iters)
-        superstep = jax.jit(superstep)
+            outcome = fused_converge_sharded(
+                g.deg, np.ones(g.n, bool), sg, mesh, tuple(axis_names),
+                n=g.n, n_iters=n_iters, max_rounds=cap)
+            rounds, converged = outcome.rounds, outcome.converged
+            msgs.extend(outcome.msgs.tolist())
+            changed_counts.extend(outcome.changed.tolist())
+            active.extend(outcome.recv.tolist())
+            core = outcome.est
+            phase_s["device-converge"] = outcome.device_s
+            phase_s["host-reconstruct"] = outcome.reconstruct_s
+        else:
+            superstep, _ = make_sharded_superstep(sg, mesh, axis_names, n_iters)
+            superstep = jax.jit(superstep)
 
-        est = jnp.asarray(sg.deg, jnp.int32)
-        src = jnp.asarray(sg.src)
-        dst = jnp.asarray(sg.dst)
-        amask = jnp.asarray(sg.arc_mask)
-        deg = jnp.asarray(sg.deg)
+            est = jnp.asarray(sg.deg, jnp.int32)
+            src = jnp.asarray(sg.src)
+            dst = jnp.asarray(sg.dst)
+            amask = jnp.asarray(sg.arc_mask)
+            deg = jnp.asarray(sg.deg)
 
-        rounds, converged = 0, False
-        while rounds < cap:
-            new_est, m, any_ch = superstep(est, src, dst, amask, deg)
-            rounds += 1
-            if not bool(any_ch):
-                converged = True
-                break
-            ch_real = np.asarray(new_est < est).reshape(-1)[: g.n]
-            msgs.append(int(m))
-            changed_counts.append(int(ch_real.sum()))
-            active.append(int(_receivers_np(g, ch_real).sum()))
-            est = new_est
-        core = np.asarray(est).reshape(-1)[: g.n].astype(np.int32)
+            rounds, converged = 0, False
+            t_conv = time.perf_counter()
+            while rounds < cap:
+                with _trace.span("kcore.round", round=rounds) as rsp:
+                    new_est, m, any_ch = superstep(est, src, dst, amask, deg)
+                    rounds += 1
+                    if not bool(any_ch):
+                        converged = True
+                        break
+                    ch_real = np.asarray(new_est < est).reshape(-1)[: g.n]
+                    msgs.append(int(m))
+                    changed_counts.append(int(ch_real.sum()))
+                    active.append(int(_receivers_np(g, ch_real).sum()))
+                    rsp.set(messages=msgs[-1], changed=changed_counts[-1])
+                    est = new_est
+            phase_s["converge"] = time.perf_counter() - t_conv
+            core = np.asarray(est).reshape(-1)[: g.n].astype(np.int32)
+        _sp.set(rounds=rounds, converged=converged,
+                messages=int(np.asarray(msgs, np.int64).sum()))
     stats = MessageStats(np.asarray(msgs, np.int64),
                          np.asarray(active[: len(msgs)], np.int64),
                          np.asarray(changed_counts[: len(msgs)], np.int64))
     return KCoreResult(core=core, rounds=rounds, converged=converged,
                        stats=stats,
-                       recompiles=compile_count() - compiles0)
+                       recompiles=compile_count() - compiles0,
+                       compile_s=compile_seconds() - csecs0,
+                       phase_s=phase_s)

@@ -18,20 +18,36 @@ The contract either way: the returned accounting is bit-equal to what the
 host-loop modes would have appended round by round (BZ-verified and
 hypothesis-tested), so fusing is purely an execution-placement choice —
 never an accounting one.
+
+Every fused run is observable (repro.obs): a ``fused-converge`` span wraps
+the whole dispatch with ``device-converge`` (the while_loop itself, blocked
+to completion so the span owns the real device wall) and
+``stats-reconstruct`` (host-side MessageStats recovery) children, plus
+attributes for rounds, messages, and the compile count/seconds delta this
+run caused (repro.core.jit_telemetry — fresh XLA compiles land inside the
+``device-converge`` span as ``xla.compile`` events). The phase walls are
+also measured unconditionally into ``FusedOutcome.device_s`` /
+``reconstruct_s`` (two ``perf_counter`` pairs per BATCH — nanoseconds
+against a convergence that runs for milliseconds) so benchmark rows get
+the breakdown without tracing on.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.kcore import (
     _fused_sharded_convergence,
     fused_convergence,
     fused_round_stats,
 )
+from repro.obs import trace
 
 
 @dataclasses.dataclass
@@ -50,6 +66,40 @@ class FusedOutcome:
     msgs: np.ndarray  # (k,) int64 messages per productive round
     changed: np.ndarray  # (k,) int64 senders per productive round
     recv: np.ndarray  # (k,) int64 receivers per productive round
+    # phase walls (always measured; see module docstring):
+    device_s: float = 0.0  # fused while_loop dispatch + device completion
+    reconstruct_s: float = 0.0  # host-side stats/est reconstruction
+    compile_delta: int = 0  # fresh XLA compiles this run caused
+    compile_s: float = 0.0  # ... and the wall XLA spent on them
+
+
+def _finish(span, raw, rounds_raw, t_dev, compiles0, csecs0, est_of):
+    """Shared tail of both fused paths: block, time phases, reconstruct."""
+    t0 = time.perf_counter()
+    r, stop, final_act, mb, cb, rb = raw
+    _k, m_r, c_r, r_r, converged = fused_round_stats(rounds_raw, stop, final_act, mb, cb, rb)
+    est = est_of()
+    reconstruct_s = time.perf_counter() - t0
+    outcome = FusedOutcome(
+        est=est,
+        rounds=int(rounds_raw),
+        converged=converged,
+        msgs=m_r,
+        changed=c_r,
+        recv=r_r,
+        device_s=t_dev,
+        reconstruct_s=reconstruct_s,
+        compile_delta=compile_count() - compiles0,
+        compile_s=compile_seconds() - csecs0,
+    )
+    span.set(
+        rounds=outcome.rounds,
+        messages=int(outcome.msgs.sum()),
+        converged=outcome.converged,
+        compile_delta=outcome.compile_delta,
+        compile_s=round(outcome.compile_s, 6),
+    )
+    return outcome
 
 
 def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, max_rounds):
@@ -59,26 +109,36 @@ def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, m
     streaming engine passes its pow2 high-water padded CSR slots, the static
     engine the plain sorted-COO arrays (every arc live).
     """
-    est_j, r, stop, final_act, mb, cb, rb = fused_convergence(
-        jnp.asarray(seed, jnp.int32),
-        jnp.asarray(src, jnp.int32),
-        jnp.asarray(dst, jnp.int32),
-        jnp.asarray(arc_mask),
-        jnp.asarray(active),
-        jnp.asarray(deg, jnp.int32),
-        n=n,
-        n_iters=n_iters,
-        max_rounds=max_rounds,
-    )
-    _k, m_r, c_r, r_r, converged = fused_round_stats(r, stop, final_act, mb, cb, rb)
-    return FusedOutcome(
-        est=np.asarray(est_j, np.int32),
-        rounds=int(r),
-        converged=converged,
-        msgs=m_r,
-        changed=c_r,
-        recv=r_r,
-    )
+    compiles0, csecs0 = compile_count(), compile_seconds()
+    with trace.span("fused-converge", n=n, max_rounds=max_rounds) as span:
+        with trace.span("device-converge"):
+            t0 = time.perf_counter()
+            est_j, r, stop, final_act, mb, cb, rb = fused_convergence(
+                jnp.asarray(seed, jnp.int32),
+                jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32),
+                jnp.asarray(arc_mask),
+                jnp.asarray(active),
+                jnp.asarray(deg, jnp.int32),
+                n=n,
+                n_iters=n_iters,
+                max_rounds=max_rounds,
+            )
+            # block INSIDE the span: the async dispatch returns immediately,
+            # and without the sync the device wall would be misattributed to
+            # whichever np.asarray happens to touch a result first
+            est_j = jax.block_until_ready(est_j)
+            t_dev = time.perf_counter() - t0
+        with trace.span("stats-reconstruct"):
+            return _finish(
+                span,
+                (r, stop, final_act, mb, cb, rb),
+                r,
+                t_dev,
+                compiles0,
+                csecs0,
+                lambda: np.asarray(est_j, np.int32),
+            )
 
 
 def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, max_rounds):
@@ -89,28 +149,35 @@ def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, ma
     streaming engine); ``seed``/``active`` are plain (n,) host vectors and
     are padded/reshaped to the shard layout here.
     """
-    prog = _fused_sharded_convergence(
-        mesh, tuple(axis_names), sg.verts_per_shard, n_iters, max_rounds
-    )
-    n_dev, V = sg.n_shards, sg.verts_per_shard
-    est_p = np.zeros(sg.n_pad, np.int32)
-    est_p[:n] = seed
-    act_p = np.zeros(sg.n_pad, bool)
-    act_p[:n] = active
-    est_j, r, stop, final_act, mb, cb, rb = prog(
-        jnp.asarray(est_p.reshape(n_dev, V)),
-        jnp.asarray(sg.src),
-        jnp.asarray(sg.dst),
-        jnp.asarray(sg.arc_mask),
-        jnp.asarray(sg.deg),
-        jnp.asarray(act_p.reshape(n_dev, V)),
-    )
-    _k, m_r, c_r, r_r, converged = fused_round_stats(r, stop, final_act, mb, cb, rb)
-    return FusedOutcome(
-        est=np.asarray(est_j).reshape(-1)[:n].astype(np.int32),
-        rounds=int(r),
-        converged=converged,
-        msgs=m_r,
-        changed=c_r,
-        recv=r_r,
-    )
+    compiles0, csecs0 = compile_count(), compile_seconds()
+    with trace.span("fused-converge", n=n, max_rounds=max_rounds, mesh_devices=sg.n_shards) as span:
+        prog = _fused_sharded_convergence(
+            mesh, tuple(axis_names), sg.verts_per_shard, n_iters, max_rounds
+        )
+        n_dev, V = sg.n_shards, sg.verts_per_shard
+        est_p = np.zeros(sg.n_pad, np.int32)
+        est_p[:n] = seed
+        act_p = np.zeros(sg.n_pad, bool)
+        act_p[:n] = active
+        with trace.span("device-converge"):
+            t0 = time.perf_counter()
+            est_j, r, stop, final_act, mb, cb, rb = prog(
+                jnp.asarray(est_p.reshape(n_dev, V)),
+                jnp.asarray(sg.src),
+                jnp.asarray(sg.dst),
+                jnp.asarray(sg.arc_mask),
+                jnp.asarray(sg.deg),
+                jnp.asarray(act_p.reshape(n_dev, V)),
+            )
+            est_j = jax.block_until_ready(est_j)
+            t_dev = time.perf_counter() - t0
+        with trace.span("stats-reconstruct"):
+            return _finish(
+                span,
+                (r, stop, final_act, mb, cb, rb),
+                r,
+                t_dev,
+                compiles0,
+                csecs0,
+                lambda: np.asarray(est_j).reshape(-1)[:n].astype(np.int32),
+            )

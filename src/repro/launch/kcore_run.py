@@ -50,6 +50,18 @@ def parse_args() -> argparse.Namespace:
         "(forces N host devices when the platform has fewer)",
     )
     ap.add_argument("--json", action="store_true")
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT.json",
+        help="enable span tracing and export a Chrome trace_event JSON "
+        "(open in Perfetto / chrome://tracing)",
+    )
+    ap.add_argument(
+        "--metrics",
+        action="store_true",
+        help="dump the process metrics registry (JSON) after the run",
+    )
     args = ap.parse_args()
     if args.mesh and (args.mode != "jacobi" or args.backend != "segment"):
         # the sharded engine is jacobi/segment only; refuse rather than
@@ -87,6 +99,10 @@ def main() -> None:
     from repro.core.cost_model import DATACENTER, INTERNET, TPU_POD, simulate_runtime
     from repro.core.messages import heartbeat_overhead
     from repro.graph import generators
+    from repro.obs import metrics, trace
+
+    if args.trace:
+        trace.enable()
 
     g = build_graph(args, generators)
     t0 = time.perf_counter()
@@ -126,6 +142,8 @@ def main() -> None:
         "heartbeats": hb["heartbeat_messages"],
         "wall_s": round(wall, 2),
         "recompiles": res.recompiles,
+        "compile_s": round(res.compile_s, 3),
+        "phase_s": {k: round(v, 4) for k, v in res.phase_s.items()},
         "simulated_runtime_s": {
             m.name: round(simulate_runtime(res.stats, m)["total_s"], 4)
             for m in (INTERNET, DATACENTER, TPU_POD)
@@ -136,6 +154,20 @@ def main() -> None:
     else:
         for k, v in report.items():
             print(f"{k}: {v}")
+    if args.trace:
+        trace.export(args.trace)
+        print(f"trace: {args.trace} ({len(trace.events())} events)")
+    if args.metrics:
+        # fold the run's headline numbers into the process registry so the
+        # dump is useful even for a single static decomposition
+        labels = {"graph": args.graph}
+        metrics.counter("kcore_rounds_total", **labels).inc(res.rounds)
+        metrics.counter("kcore_messages_total", **labels).inc(int(res.stats.total_messages))
+        metrics.gauge("kcore_compile_seconds", **labels).set(res.compile_s)
+        metrics.gauge("kcore_wall_seconds", **labels).set(wall)
+        for phase, secs in res.phase_s.items():
+            metrics.gauge("kcore_phase_seconds", graph=args.graph, phase=phase).set(secs)
+        print(json.dumps({"metrics": metrics.to_json()}, indent=1))
     assert ok, "core numbers disagree with BZ oracle!"
 
 

@@ -86,7 +86,29 @@ def parse_args():
                     help="removal-event fraction for generated traces")
     ap.add_argument("--asof-capacity", type=int, default=16,
                     help="retained window boundaries for core_asof queries")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable span tracing and export a Chrome "
+                         "trace_event JSON (open in Perfetto)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the server metrics registry (JSON, incl. "
+                         "per-op latency histograms) after the run")
     return ap.parse_args()
+
+
+def _fmt_stats(stats: dict) -> dict:
+    """Round the raw-float walls/latencies for the human-readable footer.
+
+    ``KCoreServer.stats()`` reports exact float seconds (a query wall is
+    tens of microseconds — rounding at the measurement layer would zero
+    it); presentation-side rounding belongs here, at the CLI."""
+    def _r(v):
+        if isinstance(v, float):
+            return round(v, 6)
+        if isinstance(v, dict):
+            return {k: _r(x) for k, x in v.items()}
+        return v
+
+    return {k: _r(v) for k, v in stats.items()}
 
 
 def build_graph(args, generators):
@@ -173,7 +195,20 @@ def replay_serve(args, mesh) -> None:
         tick += 1
 
     print(f"# asof_boundaries={np.round(server.asof_boundaries(), 3).tolist()}")
-    print(f"# final_stats={server.stats()}")
+    print(f"# final_stats={_fmt_stats(server.stats())}")
+    _finish_obs(args, server)
+
+
+def _finish_obs(args, server) -> None:
+    """Shared --trace/--metrics tail of both serving loops."""
+    if args.trace:
+        from repro.obs import trace
+        trace.export(args.trace)
+        print(f"# trace: {args.trace} ({len(trace.events())} events)")
+    if args.metrics:
+        import json as _json
+        print(_json.dumps({"server_metrics": server.metrics.to_json()},
+                          indent=1))
 
 
 def main() -> None:
@@ -198,6 +233,10 @@ def main() -> None:
         mesh = make_mesh((args.mesh,), ("data",))
         if args.frontier == "dense":
             args.frontier = "sharded"
+
+    if args.trace:
+        from repro.obs import trace
+        trace.enable()
 
     if args.events:
         replay_serve(args, mesh)
@@ -250,7 +289,8 @@ def main() -> None:
             round(res.patch_s, 5), args.queries,
             round(query_s, 4), server.max_k(), verified)))
 
-    print(f"# final_stats={server.stats()}")
+    print(f"# final_stats={_fmt_stats(server.stats())}")
+    _finish_obs(args, server)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""Unified observability layer: span tracing + metrics.
+
+Dependency-free (stdlib-only) measurement substrate for the whole repo:
+
+  * ``trace``    — nested-span tracer (context-manager API, monotonic
+    clocks, thread-safe, per-span attributes, true no-op when disabled)
+    with Chrome ``trace_event`` JSON export loadable in Perfetto /
+    ``chrome://tracing``;
+  * ``metrics``  — process-wide registry of counters, gauges, and
+    reservoir histograms (p50/p95/p99), exportable as JSON and the
+    Prometheus text format;
+  * ``validate`` — Chrome-trace schema/nesting/coverage validator
+    (``python -m repro.obs.validate``), the CI gate for exported traces.
+
+The hot paths are instrumented permanently (host round loop, fused
+runtime, streaming batch phases, window advances, the serving loop, XLA
+compile durations via repro.core.jit_telemetry); tracing costs nothing
+until ``trace.enable()`` — surfaced as ``--trace out.json`` /
+``--metrics`` on ``repro.launch.kcore_run`` and ``kcore_serve``.
+"""
+
+from repro.obs import metrics, trace
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               get_registry)
+from repro.obs.trace import Span, Tracer, get_tracer
+from repro.obs.validate import (TraceValidationError, span_tree_coverage,
+                                validate_chrome_trace)
+
+__all__ = [
+    "trace",
+    "metrics",
+    "Tracer",
+    "Span",
+    "get_tracer",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "get_registry",
+    "validate_chrome_trace",
+    "span_tree_coverage",
+    "TraceValidationError",
+]

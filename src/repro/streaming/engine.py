@@ -76,7 +76,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.cost_model import SeedCostModel, choose_seed
-from repro.core.jit_telemetry import compile_count
+from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.kcore import (KCoreConfig, _bs_iters, _hindex_by_bsearch,
                               _receivers_arrays, kcore_decompose,
                               kcore_decompose_sharded,
@@ -86,6 +86,7 @@ from repro.core.runtime import fused_converge_dense, fused_converge_sharded
 from repro.graph.padding import next_pow2 as _next_pow2
 from repro.graph.padding import round_up as _round_up
 from repro.graph.structs import Graph
+from repro.obs import trace as _trace
 from repro.streaming.delta import ChurnDelta, DeltaResult, EdgeBatch, \
     PatchableCSR
 
@@ -136,15 +137,24 @@ class BatchResult:
     region_size: int          # |R| — insertion region that was re-seeded up
     seed_changed: int         # vertices that had to rebroadcast at seed time
     mode: str = "dense"       # execution mode this batch actually ran in
+    # per-phase walls, always measured (two perf_counter reads per phase —
+    # nanoseconds against phases that run for milliseconds); the same
+    # boundaries the trace spans mark, so a benchmark row gets the
+    # patch/seed/converge/reconstruct breakdown without tracing enabled
     patch_s: float = 0.0      # host seconds spent patching the CSR in place
+    seed_s: float = 0.0       # warm-start seed + initial frontier
+    converge_s: float = 0.0   # re-convergence (device dispatch + rounds)
+    reconstruct_s: float = 0.0  # host-side stats assembly
     # warm-start seeding decision (repro.core.cost_model.choose_seed):
     # "tight" = subcore upper bound, "degree" = plain degree seed, and the
     # pass-count estimate the cost model based the choice on
     seed_strategy: str = "tight"
     seed_est_passes: int = 0
     # fresh XLA compilations this batch caused (process-wide; 0 = every
-    # jitted program was a cache hit — the shape-stability signal)
+    # jitted program was a cache hit — the shape-stability signal), and the
+    # wall XLA spent on them (jit_telemetry.compile_seconds delta)
     recompiles: int = 0
+    compile_s: float = 0.0
     # (whether the batch forced an O(m) CSR compaction: delta.compacted)
     # PatchableCSR health after the batch — long churn streams live or die
     # by compaction behavior, so it is first-class, not property-test-only:
@@ -679,9 +689,33 @@ class StreamingKCoreEngine:
 
     # ------------------------------------------------------------------ #
     def apply_batch(self, batch: EdgeBatch) -> BatchResult:
-        compiles0 = compile_count()
+        """Apply one churn batch and re-converge to exact cores.
+
+        When tracing is enabled (repro.obs.trace) each batch emits a
+        ``batch`` span with ``csr-patch`` / ``seed`` / ``converge`` /
+        ``host-reconstruct`` children (the fused modes nest the runtime's
+        ``fused-converge`` -> ``device-converge`` / ``stats-reconstruct``
+        tree under ``converge``, and fresh XLA compiles land as
+        ``xla.compile`` events wherever they happened). The same phase
+        boundaries are always measured into ``BatchResult.patch_s`` /
+        ``seed_s`` / ``converge_s`` / ``reconstruct_s``.
+        """
+        with _trace.span("batch", batch_id=self.batches_applied) as bsp:
+            res = self._apply_batch_body(batch)
+            bsp.set(mode=res.mode, rounds=res.rounds,
+                    messages=res.stats.total_messages,
+                    converged=res.converged,
+                    seed_strategy=res.seed_strategy,
+                    region=res.region_size,
+                    recompiles=res.recompiles,
+                    compile_s=round(res.compile_s, 6))
+        return res
+
+    def _apply_batch_body(self, batch: EdgeBatch) -> BatchResult:
+        compiles0, csecs0 = compile_count(), compile_seconds()
         t0 = time.perf_counter()
-        delta = self._csr.apply_batch(batch)
+        with _trace.span("csr-patch"):
+            delta = self._csr.apply_batch(batch)
         patch_s = time.perf_counter() - t0
         self._graph_cache = None
         self._slots_cache = None
@@ -690,39 +724,45 @@ class StreamingKCoreEngine:
         n = csr.n
         deg64 = csr.deg.astype(np.int64)
 
-        old_core_ext = np.zeros(n, np.int64)
-        old_core_ext[: self.core.shape[0]] = self.core
-        seed_choice = choose_seed(delta.inserted, csr.deg, old_core_ext,
-                                  model=self.config.seed_model)
-        if seed_choice.strategy == "degree":
-            # bulk load: degree seed (see StreamingConfig.seed_model)
-            U = deg64.copy()
-        else:
-            src_p, dst_p, live_p = self._padded_slots()
-            U = _insertion_upper_bound_arrays(n, src_p, dst_p, live_p,
-                                              csr.deg, old_core_ext,
-                                              delta.inserted)
-        seed = np.minimum(U, deg64).astype(np.int32)
-        region = U > old_core_ext
-        old_core32 = old_core_ext.astype(np.int32)
+        t_seed = time.perf_counter()
+        with _trace.span("seed") as ssp:
+            old_core_ext = np.zeros(n, np.int64)
+            old_core_ext[: self.core.shape[0]] = self.core
+            seed_choice = choose_seed(delta.inserted, csr.deg, old_core_ext,
+                                      model=self.config.seed_model)
+            if seed_choice.strategy == "degree":
+                # bulk load: degree seed (see StreamingConfig.seed_model)
+                U = deg64.copy()
+            else:
+                src_p, dst_p, live_p = self._padded_slots()
+                U = _insertion_upper_bound_arrays(n, src_p, dst_p, live_p,
+                                                  csr.deg, old_core_ext,
+                                                  delta.inserted)
+            seed = np.minimum(U, deg64).astype(np.int32)
+            region = U > old_core_ext
+            old_core32 = old_core_ext.astype(np.int32)
 
-        # ---- round 0: seed broadcast + link handshakes ---------------- #
-        seed_changed = seed != old_core32
-        msgs = [int(deg64[seed_changed].sum())
-                + 2 * int(delta.inserted.shape[0])
-                + 2 * int(delta.deleted.shape[0])]
-        changed_counts = [int(seed_changed.sum())]
+            # ---- round 0: seed broadcast + link handshakes ------------ #
+            seed_changed = seed != old_core32
+            msgs = [int(deg64[seed_changed].sum())
+                    + 2 * int(delta.inserted.shape[0])
+                    + 2 * int(delta.deleted.shape[0])]
+            changed_counts = [int(seed_changed.sum())]
 
-        # ---- initial frontier ----------------------------------------- #
-        # recompute u iff its h-index inputs changed: an incident edge
-        # appeared/disappeared, or a neighbor's broadcast value changed.
-        active = np.zeros(n, bool)
-        touched = delta.touched[delta.touched < n]
-        active[touched] = True
-        active |= seed_changed
-        src_live, dst_live = self._live_arrays()
-        active |= _receivers_arrays(n, src_live, dst_live, None,
-                                    seed_changed)
+            # ---- initial frontier ------------------------------------- #
+            # recompute u iff its h-index inputs changed: an incident edge
+            # appeared/disappeared, or a neighbor's broadcast value changed.
+            active = np.zeros(n, bool)
+            touched = delta.touched[delta.touched < n]
+            active[touched] = True
+            active |= seed_changed
+            src_live, dst_live = self._live_arrays()
+            active |= _receivers_arrays(n, src_live, dst_live, None,
+                                        seed_changed)
+            ssp.set(strategy=seed_choice.strategy,
+                    region=int(region.sum()),
+                    frontier=int(active.sum()))
+        seed_s = time.perf_counter() - t_seed
         # active_per_round follows the static engine's convention:
         # [r] = vertices recomputing/broadcasting in round r. Round 0 is the
         # seed rebroadcast; round 1's recomputers are the initial frontier.
@@ -740,50 +780,61 @@ class StreamingKCoreEngine:
         n_iters = _round_up(_bs_iters(int(csr.deg.max()) if n else 0), 4)
         n_iters = self._n_iters_hwm = max(n_iters, self._n_iters_hwm)
 
-        if mode in ("fused", "fused_sharded"):
-            if active.any():
-                outcome = self._run_fused(seed, active, n, n_iters, cap,
-                                          sharded=mode == "fused_sharded")
-                core, rounds = outcome.est, outcome.rounds
-                converged = outcome.converged
-                msgs.extend(outcome.msgs.tolist())
-                changed_counts.extend(outcome.changed.tolist())
-                actives.extend(outcome.recv.tolist())
+        t_conv = time.perf_counter()
+        with _trace.span("converge", mode=mode):
+            if mode in ("fused", "fused_sharded"):
+                if active.any():
+                    outcome = self._run_fused(seed, active, n, n_iters, cap,
+                                              sharded=mode == "fused_sharded")
+                    core, rounds = outcome.est, outcome.rounds
+                    converged = outcome.converged
+                    msgs.extend(outcome.msgs.tolist())
+                    changed_counts.extend(outcome.changed.tolist())
+                    actives.extend(outcome.recv.tolist())
+                else:
+                    core, converged = np.asarray(seed, np.int32), True
             else:
-                core, converged = np.asarray(seed, np.int32), True
-        else:
-            step = self._make_step(mode, n, n_iters)
-            while rounds < cap and active.any():
-                new_est, ch, recv = step(est, active)
-                rounds += 1
-                if not ch.any():
+                step = self._make_step(mode, n, n_iters)
+                while rounds < cap and active.any():
+                    with _trace.span("kcore.round", round=rounds):
+                        new_est, ch, recv = step(est, active)
+                        rounds += 1
+                        if not ch.any():
+                            converged = True
+                            break
+                        msgs.append(int(deg64[ch].sum()))
+                        changed_counts.append(int(ch.sum()))
+                        active = recv
+                        actives.append(int(active.sum()))
+                        est = new_est
+                if not active.any():
                     converged = True
-                    break
-                msgs.append(int(deg64[ch].sum()))
-                changed_counts.append(int(ch.sum()))
-                active = recv
-                actives.append(int(active.sum()))
-                est = new_est
-            if not active.any():
-                converged = True
-            core = np.asarray(est, np.int32)
-        stats = MessageStats(
-            messages_per_round=np.asarray(msgs, np.int64),
-            active_per_round=np.asarray(actives[: len(msgs)], np.int64),
-            changed_per_round=np.asarray(changed_counts[: len(msgs)],
-                                         np.int64),
-        )
-        self.core = core
-        self.batches_applied += 1
-        cap_slots = max(csr.capacity, 1)
-        return BatchResult(core=core, rounds=rounds, converged=converged,
-                           stats=stats, delta=delta,
-                           region_size=int(region.sum()),
-                           seed_changed=int(seed_changed.sum()),
-                           mode=mode, patch_s=patch_s,
-                           seed_strategy=seed_choice.strategy,
-                           seed_est_passes=seed_choice.est_passes,
-                           recompiles=compile_count() - compiles0,
-                           csr_compactions=int(csr.compactions),
-                           csr_dead_frac=csr.dead / cap_slots,
-                           csr_occupancy=2 * csr.m / cap_slots)
+                core = np.asarray(est, np.int32)
+        converge_s = time.perf_counter() - t_conv
+
+        t_rec = time.perf_counter()
+        with _trace.span("host-reconstruct"):
+            stats = MessageStats(
+                messages_per_round=np.asarray(msgs, np.int64),
+                active_per_round=np.asarray(actives[: len(msgs)], np.int64),
+                changed_per_round=np.asarray(changed_counts[: len(msgs)],
+                                             np.int64),
+            )
+            self.core = core
+            self.batches_applied += 1
+            cap_slots = max(csr.capacity, 1)
+            reconstruct_s = time.perf_counter() - t_rec
+            return BatchResult(core=core, rounds=rounds, converged=converged,
+                               stats=stats, delta=delta,
+                               region_size=int(region.sum()),
+                               seed_changed=int(seed_changed.sum()),
+                               mode=mode, patch_s=patch_s,
+                               seed_s=seed_s, converge_s=converge_s,
+                               reconstruct_s=reconstruct_s,
+                               seed_strategy=seed_choice.strategy,
+                               seed_est_passes=seed_choice.est_passes,
+                               recompiles=compile_count() - compiles0,
+                               compile_s=compile_seconds() - csecs0,
+                               csr_compactions=int(csr.compactions),
+                               csr_dead_frac=csr.dead / cap_slots,
+                               csr_occupancy=2 * csr.m / cap_slots)

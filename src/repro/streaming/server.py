@@ -19,6 +19,15 @@ Supported ops
     core vectors checkpointed at window boundaries (temporal replay mode,
     repro.temporal): O(1) per lookup for any retained boundary.
 
+Every request's wall-clock is observed into a PER-SERVER metrics registry
+(repro.obs.metrics — per-server so tests/processes running several servers
+never merge their latency distributions): ``stats()`` reports p50/p95/p99
+seconds per op under ``"latency"``, raw-float cumulative walls (callers
+format; rounding here would destroy microsecond query walls), and the
+registry itself is exposed as ``server.metrics`` for JSON/Prometheus
+export. When span tracing is live each serve/update/advance also emits a
+``serve.request`` / ``server.update`` / ``window.advance`` span.
+
 A server can be constructed over a static Graph (churn arrives as explicit
 ``update`` batches) or over a ``WindowedKCoreEngine`` (temporal mode:
 ``advance_window`` slides the window, and every boundary's core vector is
@@ -35,6 +44,8 @@ import numpy as np
 
 from repro.core.kcore import KCoreConfig
 from repro.graph.structs import Graph
+from repro.obs import trace as _trace
+from repro.obs.metrics import MetricsRegistry
 from repro.streaming.delta import EdgeBatch
 from repro.streaming.engine import (BatchResult, StreamingConfig,
                                     StreamingKCoreEngine)
@@ -141,6 +152,14 @@ class KCoreServer:
         self.update_rounds = 0
         self.query_wall_s = 0.0
         self.update_wall_s = 0.0
+        # per-server registry (NOT the process default): several servers in
+        # one process — a pytest run, an A/B bench — must not merge their
+        # latency distributions
+        self.metrics = MetricsRegistry()
+
+    def _observe(self, op: str, wall_s: float) -> None:
+        self.metrics.counter("server_requests_total", op=op).inc()
+        self.metrics.histogram("server_request_seconds", op=op).observe(wall_s)
 
     # ---------------- queries (reads of the maintained fixpoint) -------- #
     @property
@@ -192,11 +211,14 @@ class KCoreServer:
             raise ValueError("windowed mode: the event stream owns the "
                              "graph — advance_window() instead of update()")
         t0 = time.perf_counter()
-        res = self.engine.apply_batch(batch)
-        self.update_wall_s += time.perf_counter() - t0
+        with _trace.span("server.update"):
+            res = self.engine.apply_batch(batch)
+        dt = time.perf_counter() - t0
+        self.update_wall_s += dt
         self.updates_applied += 1
         self.update_messages += res.total_messages
         self.update_rounds += res.rounds
+        self._observe("update", dt)
         return res
 
     def advance_window(self, k: int = 1) -> WindowStep:
@@ -207,11 +229,13 @@ class KCoreServer:
                              "WindowedKCoreEngine")
         t0 = time.perf_counter()
         ws = self.windowed.advance(k)
-        self.update_wall_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.update_wall_s += dt
         self.updates_applied += 1
         self.update_messages += ws.result.total_messages
         self.update_rounds += ws.result.rounds
         self.asof_ring.push(ws.t_hi, ws.result.core)
+        self._observe("advance_window", dt)
         return ws
 
     # ---------------- request loop ------------------------------------- #
@@ -219,31 +243,47 @@ class KCoreServer:
         out = []
         for req in requests:
             t0 = time.perf_counter()
-            if req.op == "core":
-                payload = self.core_number(req.vertices)
-                self.clients_answered += payload.size
-            elif req.op == "in_kcore":
-                payload = self.in_kcore(req.vertices, req.k)
-                self.clients_answered += payload.size
-            elif req.op == "members":
-                payload = self.kcore_members(req.k)
-            elif req.op == "max_k":
-                payload = self.max_k()
-            elif req.op == "core_asof":
-                payload = self.core_asof(req.t, req.vertices)
-                self.clients_answered += payload[1].size
-            elif req.op == "update":
-                payload = self.update(req.batch)
-            else:
-                raise ValueError(f"unknown op {req.op!r}")
+            with _trace.span("serve.request", op=req.op):
+                if req.op == "core":
+                    payload = self.core_number(req.vertices)
+                    self.clients_answered += payload.size
+                elif req.op == "in_kcore":
+                    payload = self.in_kcore(req.vertices, req.k)
+                    self.clients_answered += payload.size
+                elif req.op == "members":
+                    payload = self.kcore_members(req.k)
+                elif req.op == "max_k":
+                    payload = self.max_k()
+                elif req.op == "core_asof":
+                    payload = self.core_asof(req.t, req.vertices)
+                    self.clients_answered += payload[1].size
+                elif req.op == "update":
+                    payload = self.update(req.batch)
+                else:
+                    raise ValueError(f"unknown op {req.op!r}")
             dt = time.perf_counter() - t0
             if req.op != "update":      # update() already tracks its wall
                 self.queries_served += 1
                 self.query_wall_s += dt
+                self._observe(req.op, dt)
             out.append(Response(op=req.op, payload=payload, wall_s=dt))
         return out
 
+    def latency(self) -> dict:
+        """Per-op latency summaries (seconds): ``{op: {count, sum, min,
+        max, mean, p50, p95, p99}}`` from the per-server histograms."""
+        out: dict = {}
+        for entries in (
+                self.metrics.to_json().get("server_request_seconds") or []):
+            snap = {k: v for k, v in entries.items()
+                    if k not in ("labels", "type")}
+            out[entries["labels"]["op"]] = snap
+        return out
+
     def stats(self) -> dict:
+        # walls are RAW float seconds — a typical batched query runs tens of
+        # microseconds, so any fixed rounding here would zero real signal;
+        # presentation (launch/kcore_serve) formats, this layer measures
         return {
             "n": self.engine.n,
             "m": self.engine.m,
@@ -253,7 +293,8 @@ class KCoreServer:
             "updates_applied": self.updates_applied,
             "update_messages": self.update_messages,
             "update_rounds": self.update_rounds,
-            "query_wall_s": round(self.query_wall_s, 4),
-            "update_wall_s": round(self.update_wall_s, 4),
+            "query_wall_s": self.query_wall_s,
+            "update_wall_s": self.update_wall_s,
             "asof_boundaries": len(self.asof_ring),
+            "latency": self.latency(),
         }

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.bz import bz_core_numbers
 from repro.core.kcore import KCoreConfig
+from repro.core.messages import heartbeat_overhead
 from repro.streaming.engine import StreamingConfig
 from repro.temporal.events import EventLog
 from repro.temporal.window import WindowedKCoreEngine, WindowStep
@@ -47,13 +48,22 @@ class ReplayRecord:
     mode: str
     patch_ms: float
     step_ms: float            # wall time of the whole advance
-    recompiles: int           # fresh XLA compilations this step caused
-    csr_compactions: int
-    csr_dead_frac: float
-    csr_occupancy: float
-    core_max: int
-    core_mean: float
-    oracle_ok: bool | None    # None = not checked this step
+    # remaining per-phase walls of the underlying batch (engine-measured,
+    # same boundaries as the trace spans; patch+seed+converge+reconstruct
+    # ~= the batch's share of step_ms)
+    seed_ms: float = 0.0
+    converge_ms: float = 0.0
+    reconstruct_ms: float = 0.0
+    # modeled termination-detection bill for this step's re-convergence
+    # (core.messages.heartbeat_overhead at round granularity)
+    heartbeats: int = 0
+    recompiles: int = 0       # fresh XLA compilations this step caused
+    csr_compactions: int = 0
+    csr_dead_frac: float = 0.0
+    csr_occupancy: float = 0.0
+    core_max: int = 0
+    core_mean: float = 0.0
+    oracle_ok: bool | None = None   # None = not checked this step
 
 
 @dataclasses.dataclass
@@ -84,7 +94,13 @@ class ReplayTrajectory:
             "mean_m": round(float(self.series("m").mean()), 1),
             "max_core_seen": int(self.series("core_max").max()),
             "mean_patch_ms": round(float(self.series("patch_ms").mean()), 3),
+            "mean_seed_ms": round(float(self.series("seed_ms").mean()), 3),
+            "mean_converge_ms": round(
+                float(self.series("converge_ms").mean()), 3),
+            "mean_reconstruct_ms": round(
+                float(self.series("reconstruct_ms").mean()), 3),
             "mean_step_ms": round(float(self.series("step_ms").mean()), 3),
+            "total_heartbeats": int(self.series("heartbeats").sum()),
             "recompiles": int(self.series("recompiles").sum()),
             "oracle_checks": int(sum(r.oracle_ok is not None
                                      for r in self.records)),
@@ -98,6 +114,7 @@ def record_step(ws: WindowStep, wall_s: float,
     res = ws.result
     actives = res.stats.active_per_round
     core = res.core
+    hb = heartbeat_overhead(res.stats)
     return ReplayRecord(
         step=ws.step, lo=ws.lo, hi=ws.hi,
         t_lo=round(ws.t_lo, 6), t_hi=round(ws.t_hi, 6), m=ws.m,
@@ -108,6 +125,10 @@ def record_step(ws: WindowStep, wall_s: float,
         region=int(res.region_size), mode=res.mode,
         patch_ms=round(res.patch_s * 1e3, 3),
         step_ms=round(wall_s * 1e3, 3),
+        seed_ms=round(res.seed_s * 1e3, 3),
+        converge_ms=round(res.converge_s * 1e3, 3),
+        reconstruct_ms=round(res.reconstruct_s * 1e3, 3),
+        heartbeats=int(hb["heartbeat_messages"]),
         recompiles=int(res.recompiles),
         csr_compactions=int(res.csr_compactions),
         csr_dead_frac=round(res.csr_dead_frac, 4),

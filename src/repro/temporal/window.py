@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.kcore import KCoreConfig
 from repro.graph.structs import Graph
+from repro.obs import trace as _trace
 from repro.streaming.delta import EdgeBatch, edge_keys
 from repro.streaming.engine import (BatchResult, StreamingConfig,
                                     StreamingKCoreEngine)
@@ -193,20 +194,29 @@ class WindowedKCoreEngine:
 
         The k strides collapse into ONE EdgeBatch (the net difference of
         the window edge sets), so a coarse replay pays one re-convergence
-        per advance, not per stride."""
-        batch, new_edges = self.peek_batch(k)
-        if self.by == "count":
-            self._hi = min(self._hi + k * int(self.stride), len(self.log))
-        else:
-            self._t_hi = self._t_hi + k * self.stride
-        res = self.engine.apply_batch(batch)
-        new_edges.setflags(write=False)
-        self._edges = new_edges
-        lo, hi = self.bounds
-        t_lo, t_hi = self.t_bounds
-        step = WindowStep(step=self.steps_taken, lo=lo, hi=hi,
-                          t_lo=t_lo, t_hi=t_hi, batch=batch, result=res,
-                          m=int(new_edges.shape[0]))
+        per advance, not per stride. With tracing on, each advance is a
+        ``window.advance`` span: ``window.diff`` (the edge-set diff) plus
+        the engine's ``batch`` tree."""
+        with _trace.span("window.advance", step=self.steps_taken) as sp:
+            with _trace.span("window.diff"):
+                batch, new_edges = self.peek_batch(k)
+            if self.by == "count":
+                self._hi = min(self._hi + k * int(self.stride),
+                               len(self.log))
+            else:
+                self._t_hi = self._t_hi + k * self.stride
+            res = self.engine.apply_batch(batch)
+            new_edges.setflags(write=False)
+            self._edges = new_edges
+            lo, hi = self.bounds
+            t_lo, t_hi = self.t_bounds
+            step = WindowStep(step=self.steps_taken, lo=lo, hi=hi,
+                              t_lo=t_lo, t_hi=t_hi, batch=batch, result=res,
+                              m=int(new_edges.shape[0]))
+            sp.set(inserts=int(batch.insert.shape[0]),
+                   deletes=int(batch.delete.shape[0]),
+                   rounds=res.rounds, mode=res.mode,
+                   messages=res.stats.total_messages)
         self.steps_taken += 1
         return step
 

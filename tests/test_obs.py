@@ -1,0 +1,401 @@
+"""Observability layer: tracer, metrics, trace validator, compile-seconds
+telemetry, heartbeat accounting, and the end-to-end span-coverage
+acceptance (a traced fused replay attributes >= 95% of every batch's wall
+to named phase sub-spans)."""
+
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import compile_count, compile_seconds
+from repro.core.messages import MessageStats, heartbeat_overhead
+from repro.graph import generators as gen
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.obs.validate import (TraceValidationError, span_tree_coverage,
+                                validate_chrome_trace)
+from repro.obs.validate import main as validate_main
+from repro.streaming import KCoreServer, Request
+from repro.streaming.delta import EdgeBatch
+
+
+@pytest.fixture
+def tracer():
+    """Fresh enabled tracer, independent of the process default."""
+    t = Tracer()
+    t.enable()
+    return t
+
+
+@pytest.fixture
+def default_trace():
+    """Enable the process-default tracer for one test, then restore."""
+    obs_trace.reset()
+    obs_trace.enable()
+    yield obs_trace
+    obs_trace.disable()
+    obs_trace.reset()
+
+
+# ---------------------------------------------------------------------- #
+# Tracer
+# ---------------------------------------------------------------------- #
+
+def test_span_nesting_and_attrs(tracer):
+    with tracer.span("outer", graph="EEN") as sp:
+        with tracer.span("inner"):
+            pass
+        sp.set(rounds=3)
+    evs = tracer.events()
+    assert [e["name"] for e in evs] == ["inner", "outer"]  # close order
+    inner, outer = evs
+    assert outer["args"] == {"graph": "EEN", "rounds": 3}
+    assert "args" not in inner
+    # inner is contained in outer on the same thread
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 0.01
+    assert inner["tid"] == outer["tid"]
+    for e in evs:
+        assert e["ph"] == "X" and e["dur"] >= 0
+
+
+def test_disabled_tracer_is_noop_and_shared():
+    t = Tracer()
+    s1 = t.span("a", x=1)
+    s2 = t.span("b")
+    assert s1 is s2                       # the shared NULL_SPAN singleton
+    with s1 as sp:
+        sp.set(anything="ignored")
+    assert t.events() == []
+    t.annotate(x=1)                       # no-op, no raise
+    t.record("c", 0.5)
+    assert t.events() == []
+
+
+def test_record_synthesizes_span_ending_now(tracer):
+    import time as _t
+    with tracer.span("work"):
+        _t.sleep(0.002)  # the "external" work runs inside the open span
+        tracer.record("external", 0.001, kind="compile")
+    ext, work = tracer.events()
+    assert ext["name"] == "external"
+    assert ext["args"] == {"kind": "compile"}
+    assert ext["dur"] == pytest.approx(1000.0)   # 1ms in us
+    # the synthesized span nests inside the open one
+    assert work["ts"] <= ext["ts"] + 0.01
+    assert ext["ts"] + ext["dur"] <= work["ts"] + work["dur"] + 0.01
+
+
+def test_tracer_threads_get_own_stacks(tracer):
+    def worker():
+        with tracer.span("thread-span"):
+            pass
+
+    with tracer.span("main-span"):
+        th = threading.Thread(target=worker)
+        th.start()
+        th.join()
+    evs = tracer.events()
+    tids = {e["name"]: e["tid"] for e in evs}
+    assert tids["thread-span"] != tids["main-span"]
+    validate_chrome_trace({"traceEvents": evs})   # per-thread nesting holds
+
+
+def test_export_and_current_and_annotate(tracer, tmp_path):
+    with tracer.span("top"):
+        assert tracer.current().name == "top"
+        tracer.annotate(extra=7)
+    path = tracer.export(str(tmp_path / "t.json"))
+    doc = json.loads(open(path).read())
+    assert doc["traceEvents"][0]["args"] == {"extra": 7}
+    assert validate_chrome_trace(doc)["events"] == 1
+    tracer.reset()
+    assert tracer.events() == []
+
+
+# ---------------------------------------------------------------------- #
+# Metrics
+# ---------------------------------------------------------------------- #
+
+def test_counter_and_gauge():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs", op="core")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(5)
+    g.inc(-2)
+    assert g.value == 3
+    # same (name, labels) -> same object; same name other labels -> new one
+    assert reg.counter("reqs", op="core") is c
+    assert reg.counter("reqs", op="update") is not c
+    with pytest.raises(TypeError):
+        reg.gauge("reqs", op="core")      # type mismatch on re-registration
+
+
+def test_histogram_quantiles_exact_within_reservoir():
+    h = Histogram(reservoir_size=2048)
+    for v in range(1, 1001):              # 1..1000, all retained
+        h.observe(float(v))
+    snap = h.snapshot()
+    assert snap["count"] == 1000 and snap["sum"] == pytest.approx(500500.0)
+    assert snap["min"] == 1.0 and snap["max"] == 1000.0
+    assert snap["p50"] == pytest.approx(500.5)
+    assert snap["p95"] == pytest.approx(950.05)
+    assert snap["p99"] == pytest.approx(990.01)
+
+
+def test_histogram_reservoir_bounds_memory_keeps_exact_totals():
+    h = Histogram(reservoir_size=64)
+    for v in range(10_000):
+        h.observe(float(v))
+    assert len(h._reservoir) == 64        # bounded no matter the stream
+    assert h.count == 10_000
+    assert h.sum == pytest.approx(sum(range(10_000)))
+    assert 0 <= h.quantile(0.5) < 10_000
+
+
+def test_empty_histogram_snapshot():
+    snap = Histogram().snapshot()
+    assert snap["count"] == 0
+    assert snap["p50"] is None and snap["mean"] is None
+    assert math.isnan(Histogram().quantile(0.5))
+
+
+def test_registry_json_and_prometheus_export():
+    reg = MetricsRegistry()
+    reg.counter("requests_total", op="core").inc(5)
+    reg.gauge("window_m").set(1234)
+    h = reg.histogram("latency_seconds", op="core")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    js = reg.to_json()
+    assert js["requests_total"][0]["value"] == 5
+    assert js["latency_seconds"][0]["labels"] == {"op": "core"}
+    assert js["latency_seconds"][0]["count"] == 3
+    prom = reg.to_prometheus()
+    assert '# TYPE requests_total counter' in prom
+    assert 'requests_total{op="core"} 5.0' in prom
+    assert '# TYPE latency_seconds summary' in prom
+    assert 'latency_seconds{op="core",quantile="0.5"}' in prom
+    assert 'latency_seconds_count{op="core"} 3' in prom
+    reg.reset()
+    assert reg.to_json() == {}
+
+
+def test_default_registry_module_functions():
+    obs_metrics.reset()
+    obs_metrics.counter("x").inc()
+    assert obs_metrics.to_json()["x"][0]["value"] == 1
+    assert "# TYPE x counter" in obs_metrics.to_prometheus()
+    obs_metrics.reset()
+
+
+# ---------------------------------------------------------------------- #
+# Validator
+# ---------------------------------------------------------------------- #
+
+def _ev(name, ts, dur, tid=1, **args):
+    ev = {"name": name, "ph": "X", "ts": ts, "dur": dur, "pid": 1, "tid": tid}
+    if args:
+        ev["args"] = args
+    return ev
+
+
+def test_validator_accepts_nested_rejects_partial_overlap():
+    ok = {"traceEvents": [_ev("a", 0, 100), _ev("b", 10, 20),
+                          _ev("c", 40, 20), _ev("d", 200, 5)]}
+    s = validate_chrome_trace(ok)
+    assert s["events"] == 4 and s["max_depth"] == 2
+    bad = {"traceEvents": [_ev("a", 0, 100), _ev("b", 50, 100)]}
+    with pytest.raises(TraceValidationError, match="overlap"):
+        validate_chrome_trace(bad)
+
+
+@pytest.mark.parametrize("ev", [
+    {"ph": "X", "ts": 0, "dur": 1, "pid": 1, "tid": 1},          # no name
+    _ev("a", -1, 5),                                             # negative ts
+    _ev("a", 0, -5),                                             # negative dur
+    {**_ev("a", 0, 1), "ph": "B"},                               # wrong phase
+    {**_ev("a", 0, 1), "pid": "x"},                              # pid type
+    {**_ev("a", 0, 1), "args": [1]},                             # args type
+])
+def test_validator_rejects_malformed_events(ev):
+    with pytest.raises(TraceValidationError):
+        validate_chrome_trace({"traceEvents": [ev]})
+
+
+def test_span_tree_coverage_direct_children_only():
+    evs = [_ev("batch", 0, 100), _ev("patch", 0, 30),
+           _ev("converge", 30, 60), _ev("inner", 35, 10)]
+    (cov,) = span_tree_coverage(evs, "batch")
+    # inner is a grandchild — only patch+converge count: 90/100
+    assert cov["coverage"] == pytest.approx(0.9)
+    assert cov["children"] == ["converge", "patch"]
+
+
+def test_validator_cli(tmp_path, capsys):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(
+        {"traceEvents": [_ev("batch", 0, 100), _ev("patch", 0, 99)]}))
+    assert validate_main([str(good), "--require-span", "batch",
+                          "--min-coverage", "0.95"]) == 0
+    assert validate_main([str(good), "--require-span", "missing"]) == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert validate_main([str(bad)]) == 1
+    low = tmp_path / "low.json"
+    low.write_text(json.dumps(
+        {"traceEvents": [_ev("batch", 0, 100), _ev("patch", 0, 10)]}))
+    assert validate_main([str(low), "--require-span", "batch",
+                          "--min-coverage", "0.95"]) == 1
+
+
+# ---------------------------------------------------------------------- #
+# Compile telemetry (jit_telemetry.compile_seconds)
+# ---------------------------------------------------------------------- #
+
+def test_compile_seconds_tracks_fresh_jit_signature():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def _fresh(x):
+        return x * 2 + 1
+
+    c0, s0 = compile_count(), compile_seconds()
+    _fresh(jnp.arange(7_919))             # prime-sized: a fresh signature
+    dc = compile_count() - c0
+    ds = compile_seconds() - s0
+    assert dc >= 1
+    assert ds > 0.0                       # the compile took real wall time
+    # cache hit: neither count nor seconds move
+    c1, s1 = compile_count(), compile_seconds()
+    _fresh(jnp.arange(7_919))
+    assert compile_count() == c1 and compile_seconds() == s1
+
+
+def test_compile_lands_as_span_when_tracing(default_trace):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def _fresh2(x):
+        return x * 3 - 1
+
+    with default_trace.span("host-work"):
+        _fresh2(jnp.arange(7_907))        # fresh signature inside the span
+    names = [e["name"] for e in default_trace.events()]
+    assert "xla.compile" in names
+    doc = default_trace.chrome_trace()
+    validate_chrome_trace(doc)
+    (cov,) = span_tree_coverage(doc["traceEvents"], "host-work")
+    assert "xla.compile" in cov["children"]
+
+
+# ---------------------------------------------------------------------- #
+# Heartbeat accounting (core.messages.heartbeat_overhead)
+# ---------------------------------------------------------------------- #
+
+def test_heartbeat_overhead_round_granularity():
+    stats = MessageStats(
+        messages_per_round=np.asarray([100, 50, 20], np.int64),
+        active_per_round=np.asarray([10, 6, 2], np.int64),
+        changed_per_round=np.asarray([10, 5, 1], np.int64))
+    hb = heartbeat_overhead(stats)
+    assert hb["heartbeat_messages"] == 18          # one per active per round
+    assert hb["bsp_allreduce_rounds"] == stats.rounds
+    assert hb["heartbeat_fraction_of_traffic"] == pytest.approx(18 / 170)
+    # sparser heartbeat period sums every k-th round's actives
+    hb2 = heartbeat_overhead(stats, heartbeat_every_rounds=2)
+    assert hb2["heartbeat_messages"] == 10 + 2
+
+
+def test_heartbeat_overhead_zero_traffic_guard():
+    stats = MessageStats(*(np.zeros(0, np.int64),) * 3)
+    hb = heartbeat_overhead(stats)
+    assert hb["heartbeat_messages"] == 0
+    assert hb["heartbeat_fraction_of_traffic"] == 0
+
+
+# ---------------------------------------------------------------------- #
+# End-to-end: engines emit well-formed, well-attributed traces
+# ---------------------------------------------------------------------- #
+
+def test_static_decompose_phase_walls_without_tracing():
+    g = gen.erdos_renyi(300, 900, seed=3)
+    from repro.core import kcore_decompose
+    res = kcore_decompose(g)
+    assert obs_trace.enabled() is False
+    assert res.phase_s.get("converge", 0) > 0
+    assert res.compile_s >= 0.0
+    fused = kcore_decompose(g, fused=True)
+    assert fused.phase_s.get("device-converge", 0) > 0
+    assert "host-reconstruct" in fused.phase_s
+
+
+def test_traced_fused_replay_meets_span_coverage_acceptance(default_trace):
+    """The ISSUE acceptance: a fused streaming replay's trace attributes
+    >= 95% of every batch span's wall to its named phase children."""
+    from repro.streaming import StreamingConfig
+    from repro.temporal import replay, temporal_barabasi_albert
+
+    log = temporal_barabasi_albert(400, 3, seed=1, remove_frac=0.1)
+    traj = replay(log, window=max(len(log) // 4, 10),
+                  stride=max(len(log) // 8, 5),
+                  config=StreamingConfig(frontier="fused"), max_steps=4)
+    assert traj.records, "replay produced no steps"
+    rec = traj.records[-1]
+    assert rec.converge_ms >= 0 and rec.seed_ms >= 0
+    assert rec.heartbeats > 0
+
+    doc = default_trace.chrome_trace()
+    summary = validate_chrome_trace(doc)   # schema + nesting
+    assert summary["names"].get("batch", 0) == len(traj.records)
+    assert summary["names"].get("window.advance", 0) == len(traj.records)
+    cov = span_tree_coverage(doc["traceEvents"], "batch")
+    assert len(cov) == len(traj.records)
+    worst = min(c["coverage"] for c in cov)
+    assert worst >= 0.95, f"batch span child coverage {worst:.3f} < 0.95"
+    for c in cov:
+        assert {"csr-patch", "seed", "converge"} <= set(c["children"])
+
+
+def test_server_latency_histograms_by_op():
+    g = gen.erdos_renyi(200, 500, seed=2)
+    srv = KCoreServer(g)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for _ in range(40):
+        reqs.append(Request(op="core", vertices=rng.integers(0, g.n, 8)))
+        reqs.append(Request(op="max_k"))
+    srv.serve(reqs)
+    ins = np.asarray([[0, 5], [1, 7]])
+    srv.update(EdgeBatch.make(insert=ins))
+
+    stats = srv.stats()
+    # raw float walls: no fixed rounding at the measurement layer
+    assert isinstance(stats["query_wall_s"], float)
+    assert stats["query_wall_s"] > 0
+    lat = stats["latency"]
+    assert set(lat) == {"core", "max_k", "update"}
+    for op in ("core", "max_k"):
+        snap = lat[op]
+        assert snap["count"] == 40
+        assert 0 < snap["p50"] <= snap["p95"] <= snap["p99"]
+        assert snap["min"] <= snap["mean"] <= snap["max"]
+        assert snap["sum"] >= snap["count"] * snap["min"]
+    assert lat["update"]["count"] == 1
+    # per-server registries: a second server starts clean
+    srv2 = KCoreServer(gen.erdos_renyi(50, 100, seed=4))
+    assert srv2.stats()["latency"] == {}
+    prom = srv.metrics.to_prometheus()
+    assert 'server_request_seconds{op="core",quantile="0.99"}' in prom

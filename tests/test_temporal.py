@@ -257,6 +257,40 @@ def test_checkpoint_ring_asof_and_eviction():
         core[0] = 99
 
 
+def test_checkpoint_ring_edge_cases():
+    with pytest.raises(ValueError):
+        CoreCheckpointRing(capacity=0)
+
+    # capacity=1: every push evicts the previous snapshot
+    ring = CoreCheckpointRing(capacity=1)
+    ring.push(1.0, np.full(3, 1))
+    ring.push(2.0, np.full(3, 2))
+    assert len(ring) == 1 and ring.times.tolist() == [2.0]
+    assert ring.asof(2.0)[0] == 2.0            # exact-boundary hit
+    with pytest.raises(KeyError):
+        ring.asof(1.0)                          # evicted boundary
+
+    # equal timestamps are legal (non-decreasing); asof answers the LATEST
+    # snapshot at that time (searchsorted side="right")
+    ring2 = CoreCheckpointRing(capacity=4)
+    ring2.push(5.0, np.full(2, 1))
+    ring2.push(5.0, np.full(2, 2))
+    bt, core = ring2.asof(5.0)
+    assert bt == 5.0 and (core == 2).all()
+
+    # many wraparounds: the window of retained boundaries keeps sliding
+    ring3 = CoreCheckpointRing(capacity=3)
+    for t in range(10):
+        ring3.push(float(t), np.full(2, t))
+    assert ring3.times.tolist() == [7.0, 8.0, 9.0]
+    bt, core = ring3.asof(8.5)
+    assert bt == 8.0 and (core == 8).all()
+    with pytest.raises(KeyError):
+        ring3.asof(6.999)                       # just below oldest retained
+    bt, core = ring3.asof(7.0)                  # oldest retained, exact hit
+    assert bt == 7.0 and (core == 7).all()
+
+
 def test_server_windowed_replay_and_asof_queries():
     log = temporal_snap_analogue("FC", scale=0.03, seed=0, remove_frac=0.2)
     weng = WindowedKCoreEngine(log, window=300, stride=120)
