@@ -3,6 +3,7 @@ composable JAX module, with exact message accounting, termination-detection
 models, and a simulated-network cost model."""
 
 from repro.core.bz import bz_core_numbers, max_core
+from repro.core.dispatch import DispatchPlan, pallas_supported, resolve_plan
 from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.kcore import (
     KCoreConfig,
@@ -31,6 +32,9 @@ __all__ = [
     "fused_converge_sharded",
     "bz_core_numbers",
     "max_core",
+    "DispatchPlan",
+    "pallas_supported",
+    "resolve_plan",
     "compile_count",
     "compile_seconds",
     "KCoreConfig",

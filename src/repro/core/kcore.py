@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import dispatch as _dispatch
 from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.messages import MessageStats
 from repro.obs import trace as _trace
@@ -64,6 +65,11 @@ class KCoreConfig:
     # shared fused runtime (core/runtime.py) instead of one jitted superstep
     # per Python-loop round. jacobi only; accounting is bit-equal either way.
     fused: bool = False
+    # superstep kernel dispatch (repro.core.dispatch): "auto" consults the
+    # platform layer (REPRO_PALLAS env; Pallas only where it compiles
+    # natively), "pallas"/"xla" force it. Segment-backend jacobi paths
+    # (host loop and fused) only; execution placement, never accounting.
+    dispatch: str = "auto"
 
 
 @dataclasses.dataclass
@@ -86,6 +92,9 @@ class KCoreResult:
     # (the whole round loop). Always measured — two perf_counter pairs per
     # DECOMPOSITION, not per round.
     phase_s: dict = dataclasses.field(default_factory=dict)
+    # resolved superstep dispatch this run executed with ("xla" | "pallas");
+    # see repro.core.dispatch — bills are bit-equal across choices
+    dispatch: str = "xla"
 
 
 def _bs_iters(max_deg: int) -> int:
@@ -401,7 +410,7 @@ def kcore_decompose(g: Graph, config: KCoreConfig = KCoreConfig(), *,
         res = _decompose_body(g, config, use_fused)
         _sp.set(rounds=res.rounds, messages=res.stats.total_messages,
                 converged=res.converged, recompiles=res.recompiles,
-                compile_s=round(res.compile_s, 6))
+                compile_s=round(res.compile_s, 6), dispatch=res.dispatch)
     return res
 
 
@@ -409,6 +418,7 @@ def _decompose_body(g: Graph, config: KCoreConfig,
                     use_fused: bool) -> KCoreResult:
     compiles0, csecs0 = compile_count(), compile_seconds()
     phase_s: dict = {}
+    dispatch_kind = "xla"
     n = g.n
     if n == 0:
         return KCoreResult(core=np.zeros(0, np.int32), rounds=0,
@@ -427,6 +437,14 @@ def _decompose_body(g: Graph, config: KCoreConfig,
     if use_fused:
         from repro.core.runtime import fused_converge_dense
 
+        plan = _dispatch.resolve_plan(config.dispatch)
+        ell = None
+        if plan.kind == "pallas":
+            from repro.graph.structs import build_ell
+
+            # static fully-live adjacency + degree seed: the ELL h-index
+            # route is exact here (see dispatch._make_round_body)
+            ell = build_ell(g, widths=config.widths)
         # from-scratch seeding: est = degrees, frontier = every vertex —
         # round 1 of the fused loop IS round 1 of the host loop, and the
         # recv-masked rounds after it are exact for the monotone locality
@@ -434,8 +452,10 @@ def _decompose_body(g: Graph, config: KCoreConfig,
         outcome = fused_converge_dense(
             g.deg, np.ones(n, bool), g.src, g.dst,
             np.ones(g.num_arcs, bool), g.deg,
-            n=n, n_iters=n_iters, max_rounds=max_rounds)
+            n=n, n_iters=n_iters, max_rounds=max_rounds,
+            dispatch=plan.kind, ell=ell)
         rounds, converged = outcome.rounds, outcome.converged
+        dispatch_kind = outcome.dispatch
         msgs.extend(outcome.msgs.tolist())
         changed_counts.extend(outcome.changed.tolist())
         active.extend(outcome.recv.tolist())
@@ -444,16 +464,31 @@ def _decompose_body(g: Graph, config: KCoreConfig,
         phase_s["host-reconstruct"] = outcome.reconstruct_s
 
     elif config.backend == "segment" and config.mode == "jacobi":
+        plan = _dispatch.resolve_plan(config.dispatch)
+        dispatch_kind = plan.kind
         est = jnp.asarray(g.deg, jnp.int32)
         src = jnp.asarray(g.src, jnp.int32)
         dst = jnp.asarray(g.dst, jnp.int32)
         amask = jnp.ones(g.num_arcs, bool)
+        if plan.kind == "pallas":
+            from repro.graph.structs import build_ell
+
+            ell = build_ell(g, widths=config.widths)
+            prog = _dispatch.masked_round_program(
+                n, n_iters, plan, g.src, g.dst, ell=ell)
+            ones = jnp.ones(n, bool)
+
+            def step(est):
+                return prog(est, amask, ones)
+        else:
+
+            def step(est):
+                return _round_segment(est, src, dst, amask, n, n_iters)
         rounds, converged = 0, False
         t_conv = time.perf_counter()
         while rounds < max_rounds:
             with _trace.span("kcore.round", round=rounds) as rsp:
-                new_est, changed, recv = _round_segment(est, src, dst, amask,
-                                                        n, n_iters)
+                new_est, changed, recv = step(est)
                 rounds += 1
                 ch_np = np.asarray(changed)
                 if not ch_np.any():
@@ -469,6 +504,8 @@ def _decompose_body(g: Graph, config: KCoreConfig,
 
     elif config.backend in ("ell", "ell_pallas") and config.mode == "jacobi":
         from repro.graph.structs import build_ell
+        if config.backend == "ell_pallas":
+            dispatch_kind = "pallas"
         ell = build_ell(g, widths=config.widths)
         round_fn = _make_round_ell(ell, n_iters,
                                    use_pallas=config.backend == "ell_pallas")
@@ -528,7 +565,7 @@ def _decompose_body(g: Graph, config: KCoreConfig,
                        stats=stats,
                        recompiles=compile_count() - compiles0,
                        compile_s=compile_seconds() - csecs0,
-                       phase_s=phase_s)
+                       phase_s=phase_s, dispatch=dispatch_kind)
 
 
 def _receivers_arrays(n: int, src: np.ndarray, dst: np.ndarray,

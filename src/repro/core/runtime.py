@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch as _dispatch
 from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.kcore import (
     _fused_sharded_convergence,
@@ -71,9 +72,13 @@ class FusedOutcome:
     reconstruct_s: float = 0.0  # host-side stats/est reconstruction
     compile_delta: int = 0  # fresh XLA compiles this run caused
     compile_s: float = 0.0  # ... and the wall XLA spent on them
+    # which superstep implementation ran (repro.core.dispatch): "xla" =
+    # generic segment ops, "pallas" = the kernels package. Execution
+    # placement only — the accounting above is bit-equal either way.
+    dispatch: str = "xla"
 
 
-def _finish(span, raw, rounds_raw, t_dev, compiles0, csecs0, est_of):
+def _finish(span, raw, rounds_raw, t_dev, compiles0, csecs0, est_of, dispatch="xla"):
     """Shared tail of both fused paths: block, time phases, reconstruct."""
     t0 = time.perf_counter()
     r, stop, final_act, mb, cb, rb = raw
@@ -91,6 +96,7 @@ def _finish(span, raw, rounds_raw, t_dev, compiles0, csecs0, est_of):
         reconstruct_s=reconstruct_s,
         compile_delta=compile_count() - compiles0,
         compile_s=compile_seconds() - csecs0,
+        dispatch=dispatch,
     )
     span.set(
         rounds=outcome.rounds,
@@ -102,28 +108,55 @@ def _finish(span, raw, rounds_raw, t_dev, compiles0, csecs0, est_of):
     return outcome
 
 
-def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, max_rounds):
+def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, max_rounds, dispatch=None, ell=None):
     """Single-device fused convergence over (padded) arc arrays.
 
     ``src``/``dst``/``arc_mask`` may be numpy or already-device arrays; the
     streaming engine passes its pow2 high-water padded CSR slots, the static
     engine the plain sorted-COO arrays (every arc live).
+
+    ``dispatch`` picks the superstep implementation inside the while_loop
+    (``repro.core.dispatch``): None/"auto" consults the platform layer
+    (``REPRO_PALLAS``), "pallas"/"xla" force it. With the Pallas plan the
+    per-round reductions run through the kernels package — and through the
+    ``kcore_hindex`` ELL kernel when the caller passes the static
+    degree-bucketed ``ell`` layout (from-scratch decompositions only; the
+    streaming engine's masked slot arrays stay on the segment-sum route).
+    Accounting is bit-equal across every dispatch choice.
     """
     compiles0, csecs0 = compile_count(), compile_seconds()
-    with trace.span("fused-converge", n=n, max_rounds=max_rounds) as span:
+    plan = _dispatch.resolve_plan(dispatch)
+    with trace.span("fused-converge", n=n, max_rounds=max_rounds, dispatch=plan.kind) as span:
         with trace.span("device-converge"):
             t0 = time.perf_counter()
-            est_j, r, stop, final_act, mb, cb, rb = fused_convergence(
-                jnp.asarray(seed, jnp.int32),
-                jnp.asarray(src, jnp.int32),
-                jnp.asarray(dst, jnp.int32),
-                jnp.asarray(arc_mask),
-                jnp.asarray(active),
-                jnp.asarray(deg, jnp.int32),
-                n=n,
-                n_iters=n_iters,
-                max_rounds=max_rounds,
-            )
+            if plan.kind == "pallas":
+                prog = _dispatch.fused_convergence_program(
+                    n,
+                    n_iters,
+                    max_rounds,
+                    plan,
+                    np.asarray(src, np.int32),
+                    np.asarray(dst, np.int32),
+                    ell=ell,
+                )
+                est_j, r, stop, final_act, mb, cb, rb = prog(
+                    jnp.asarray(seed, jnp.int32),
+                    jnp.asarray(arc_mask),
+                    jnp.asarray(active),
+                    jnp.asarray(deg, jnp.int32),
+                )
+            else:
+                est_j, r, stop, final_act, mb, cb, rb = fused_convergence(
+                    jnp.asarray(seed, jnp.int32),
+                    jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32),
+                    jnp.asarray(arc_mask),
+                    jnp.asarray(active),
+                    jnp.asarray(deg, jnp.int32),
+                    n=n,
+                    n_iters=n_iters,
+                    max_rounds=max_rounds,
+                )
             # block INSIDE the span: the async dispatch returns immediately,
             # and without the sync the device wall would be misattributed to
             # whichever np.asarray happens to touch a result first
@@ -138,6 +171,7 @@ def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, m
                 compiles0,
                 csecs0,
                 lambda: np.asarray(est_j, np.int32),
+                dispatch=plan.kind,
             )
 
 

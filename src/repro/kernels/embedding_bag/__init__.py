@@ -1,3 +1,11 @@
-from repro.kernels.embedding_bag.ops import embedding_bag_fused
+"""embedding_bag kernel package — attribute access defers the Pallas import."""
 
 __all__ = ["embedding_bag_fused"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro.kernels.embedding_bag import ops
+
+        return getattr(ops, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -20,16 +20,15 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _bag_kernel(idx_ref, table_ref, out_ref, *, L: int, bb: int):
     i = pl.program_id(0)
-    acc = jnp.zeros(out_ref.shape, jnp.float32)   # (bb, D)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)  # (bb, D)
 
     def body(j, acc):
         def row(b, acc):
             ix = idx_ref[i * bb + b, j]
             valid = ix >= 0
-            r = pl.load(table_ref, (pl.dslice(jnp.maximum(ix, 0), 1),
-                                    slice(None)))           # (1, D)
-            return acc.at[b].add(jnp.where(valid, r[0], 0.0)
-                                 .astype(jnp.float32))
+            r = pl.load(table_ref, (pl.dslice(jnp.maximum(ix, 0), 1), slice(None)))  # (1, D)
+            return acc.at[b].add(jnp.where(valid, r[0], 0.0).astype(jnp.float32))
+
         return jax.lax.fori_loop(0, bb, row, acc)
 
     acc = jax.lax.fori_loop(0, L, body, acc)

@@ -7,22 +7,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro import platform as _platform
 
 
 @functools.partial(jax.jit, static_argnames=())
 def embedding_bag_fused(table, indices):
     """table (V, D), indices (B, L) int32 (−1 pad) -> (B, D) sum-bags."""
+    from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
     B, L = indices.shape
     bb = 8
     pad = (-B) % bb
     if pad:
-        indices = jnp.pad(indices, ((0, pad), (0, 0)),
-                          constant_values=-1)
-    out = embedding_bag_pallas(table, indices, bb=bb,
-                               interpret=not _on_tpu())
+        indices = jnp.pad(indices, ((0, pad), (0, 0)), constant_values=-1)
+    out = embedding_bag_pallas(table, indices, bb=bb, interpret=_platform.interpret_kernels())
     return out[:B]

@@ -22,9 +22,22 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  scale: float, causal: bool, window: int | None,
-                  bq: int, bk: int, n_kv: int):
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    bq: int,
+    bk: int,
+    n_kv: int,
+):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -34,12 +47,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0]                                # (bq, d)
-    k = k_ref[0]                                # (bk, d)
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bk, d)
     v = v_ref[0]
     s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = s * scale  # (bq, bk)
 
     q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
@@ -50,46 +64,45 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         mask &= k_pos > q_pos - window
     s = jnp.where(mask, s, NEG_INF)
 
-    m_prev = m_ref[...]                         # (bq, 1)
+    m_prev = m_ref[...]  # (bq, 1)
     m_cur = jnp.max(s, axis=1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                      # (bq, bk)
+    p = jnp.exp(s - m_new)  # (bq, bk)
     l_new = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
     m_ref[...] = m_new
     l_ref[...] = l_new
 
     @pl.when(ki == n_kv - 1)
     def _fin():
-        o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def flash_attention_pallas(q, k, v, *, causal: bool, window: int | None,
-                           bq: int, bk: int, interpret: bool):
+def flash_attention_pallas(
+    q, k, v, *, causal: bool, window: int | None, bq: int, bk: int, interpret: bool
+):
     """q: (BH, Sq, d), k/v: (BH, Sk, d) — heads pre-flattened; kv may have
     fewer BH rows than q (GQA): index map folds q-head -> kv-head."""
     BHq, Sq, d = q.shape
     BHk, Sk, _ = k.shape
     rep = BHq // BHk
     n_q, n_kv = Sq // bq, Sk // bk
-    scale = 1.0 / (d ** 0.5)
+    scale = 1.0 / (d**0.5)
 
     kernel = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, window=window,
-        bq=bq, bk=bk, n_kv=n_kv)
+        _flash_kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk, n_kv=n_kv
+    )
     return pl.pallas_call(
         kernel,
         grid=(BHq, n_q, n_kv),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, bk, d), lambda bh, qi, ki, rep=rep:
-                         (bh // rep, ki, 0)),
-            pl.BlockSpec((1, bk, d), lambda bh, qi, ki, rep=rep:
-                         (bh // rep, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki, rep=rep: (bh // rep, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((BHq, Sq, d), q.dtype),

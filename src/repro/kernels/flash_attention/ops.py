@@ -7,11 +7,7 @@ import functools
 
 import jax
 
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro import platform as _platform
 
 
 def _pick_blocks(Sq: int, Sk: int, d: int) -> tuple[int, int]:
@@ -25,13 +21,14 @@ def _pick_blocks(Sq: int, Sk: int, d: int) -> tuple[int, int]:
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: int | None = None):
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None):
     """q: (B, Sq, Hq, d), k/v: (B, Sk, Hkv, d) -> (B, Sq, Hq, d).
 
     Drop-in for the XLA chunked path in models/transformer (same masking
     semantics: causal + optional sliding window over absolute positions).
     """
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
     B, Sq, Hq, d = q.shape
     _, Sk, Hkv, _ = k.shape
     qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, d)
@@ -39,6 +36,13 @@ def flash_attention(q, k, v, *, causal: bool = True,
     vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, d)
     bq, bk = _pick_blocks(Sq, Sk, d)
     out = flash_attention_pallas(
-        qf, kf, vf, causal=causal, window=window, bq=bq, bk=bk,
-        interpret=not _on_tpu())
+        qf,
+        kf,
+        vf,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        interpret=_platform.interpret_kernels(),
+    )
     return out.reshape(B, Hq, Sq, d).transpose(0, 2, 1, 3)

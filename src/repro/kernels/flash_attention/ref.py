@@ -14,8 +14,7 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
     if rep > 1:
         k = jnp.repeat(k, rep, axis=0)
         v = jnp.repeat(v, rep, axis=0)
-    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) / (d**0.5)
     q_pos = jnp.arange(Sq)[:, None]
     k_pos = jnp.arange(Sk)[None, :]
     mask = jnp.ones((Sq, Sk), bool)

@@ -1,3 +1,12 @@
-from repro.kernels.kcore_hindex.ops import hindex_rows
+"""kcore_hindex kernel package — attribute access defers the Pallas import
+(repro.core must stay importable on jax builds without Pallas)."""
 
 __all__ = ["hindex_rows"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro.kernels.kcore_hindex import ops
+
+        return getattr(ops, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

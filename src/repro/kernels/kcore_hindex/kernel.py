@@ -24,16 +24,16 @@ from jax.experimental import pallas as pl
 
 
 def _hindex_kernel(nbr_ref, estu_ref, out_ref, *, n_iters: int):
-    vals = nbr_ref[...]                      # (TR, W) int32
-    est_u = estu_ref[...]                    # (TR, 1) int32
-    vals = jnp.minimum(vals, est_u)          # clip at own estimate
+    vals = nbr_ref[...]  # (TR, W) int32
+    est_u = estu_ref[...]  # (TR, 1) int32
+    vals = jnp.minimum(vals, est_u)  # clip at own estimate
 
     lo = jnp.zeros_like(est_u)
     hi = est_u
 
     def body(_, lohi):
         lo, hi = lohi
-        mid = (lo + hi + 1) // 2             # probe k (>= 1 when hi > lo)
+        mid = (lo + hi + 1) // 2  # probe k (>= 1 when hi > lo)
         k = jnp.maximum(mid, 1)
         cnt = jnp.sum((vals >= k).astype(jnp.int32), axis=1, keepdims=True)
         ok = cnt >= mid
@@ -43,8 +43,7 @@ def _hindex_kernel(nbr_ref, estu_ref, out_ref, *, n_iters: int):
     out_ref[...] = lo
 
 
-def hindex_rows_pallas(nbr_est, est_u2d, *, n_iters: int, row_tile: int,
-                       interpret: bool):
+def hindex_rows_pallas(nbr_est, est_u2d, *, n_iters: int, row_tile: int, interpret: bool):
     """nbr_est: (R, W) int32 (R % row_tile == 0), est_u2d: (R, 1) int32."""
     rows, width = nbr_est.shape
     grid = (rows // row_tile,)

@@ -14,6 +14,6 @@ import jax.numpy as jnp
 def hindex_rows_ref(nbr_est, est_u, n_iters: int = 0):
     """nbr_est: (R, W) int32 (sentinel slots 0), est_u: (R,) int32 → (R,)."""
     vals = jnp.minimum(nbr_est, est_u[:, None])
-    s = -jnp.sort(-vals, axis=1)                       # descending
+    s = -jnp.sort(-vals, axis=1)  # descending
     ranks = jnp.arange(1, s.shape[1] + 1, dtype=s.dtype)
     return jnp.max(jnp.minimum(s, ranks[None, :]), axis=1)

@@ -26,25 +26,23 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _seg_kernel(block_row_ref, vals_ref, rows_ref, out_ref, *, R: int):
     i = pl.program_id(0)
-    first = jnp.logical_or(
-        i == 0, block_row_ref[jnp.maximum(i - 1, 0)] != block_row_ref[i])
+    first = jnp.logical_or(i == 0, block_row_ref[jnp.maximum(i - 1, 0)] != block_row_ref[i])
 
     @pl.when(first)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    vals = vals_ref[...]                      # (be, F)
-    rows = rows_ref[...]                      # (be, 1) local row in [0, R)
-    onehot = (rows == jax.lax.broadcasted_iota(jnp.int32, (rows.shape[0], R),
-                                               1)).astype(vals.dtype)
+    vals = vals_ref[...]  # (be, F)
+    rows = rows_ref[...]  # (be, 1) local row in [0, R)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (rows.shape[0], R), 1)
+    onehot = (rows == iota).astype(vals.dtype)
     # (R, be) x (be, F) on the MXU
     out_ref[...] += jax.lax.dot_general(
-        onehot, vals, (((0,), (0,)), ((), ())),
-        preferred_element_type=out_ref.dtype)
+        onehot, vals, (((0,), (0,)), ((), ())), preferred_element_type=out_ref.dtype
+    )
 
 
-def segment_sum_pallas(vals, rows_local, block_row, n_blocks_out: int,
-                       *, R: int, interpret: bool):
+def segment_sum_pallas(vals, rows_local, block_row, n_blocks_out: int, *, R: int, interpret: bool):
     """vals: (E_pad, F); rows_local: (E_pad, 1) int32 row-within-block;
     block_row: (n_edge_blocks,) int32 out-block id per edge block.
     Returns (n_blocks_out * R, F)."""

@@ -9,25 +9,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.segment_sum.kernel import segment_sum_pallas
+from repro import platform as _platform
 
 
 @dataclasses.dataclass(frozen=True)
 class BlockedLayout:
     """Host-precomputed edge order/padding such that every ``be``-edge block
     touches one ``R``-row output block (see kernel.py)."""
-    order: np.ndarray        # (E,) permutation into the padded stream slots
+
+    order: np.ndarray  # (E,) permutation into the padded stream slots
     e_pad: int
-    rows_local: np.ndarray   # (E_pad,) int32; padding slots point at row 0
-    pad_mask: np.ndarray     # (E_pad,) bool — True for real edges
-    block_row: np.ndarray    # (n_blocks,) int32
+    rows_local: np.ndarray  # (E_pad,) int32; padding slots point at row 0
+    pad_mask: np.ndarray  # (E_pad,) bool — True for real edges
+    block_row: np.ndarray  # (n_blocks,) int32
     R: int
     be: int
     n_rows_pad: int
 
 
-def blocked_layout(seg_ids: np.ndarray, n_rows: int, *, R: int = 256,
-                   be: int = 512) -> BlockedLayout:
+def blocked_layout(
+    seg_ids: np.ndarray, n_rows: int, *, R: int = 256, be: int = 512
+) -> BlockedLayout:
     seg_ids = np.asarray(seg_ids)
     order = np.argsort(seg_ids, kind="stable")
     seg_sorted = seg_ids[order]
@@ -42,8 +44,7 @@ def blocked_layout(seg_ids: np.ndarray, n_rows: int, *, R: int = 256,
     # allocate padded slots per row block
     slot_starts = np.concatenate([[0], np.cumsum(blocks_per_rb * be)[:-1]])
     e_starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    slot = slot_starts[rb_of_edge] + (np.arange(len(seg_sorted)) -
-                                      e_starts[rb_of_edge])
+    slot = slot_starts[rb_of_edge] + (np.arange(len(seg_sorted)) - e_starts[rb_of_edge])
     e_pad = int((blocks_per_rb * be).sum()) or be
     rows_local = np.zeros(e_pad, np.int32)
     pad_mask = np.zeros(e_pad, bool)
@@ -54,20 +55,32 @@ def blocked_layout(seg_ids: np.ndarray, n_rows: int, *, R: int = 256,
         block_row = np.zeros(1, np.int32)
     perm = np.zeros(e_pad, np.int64)
     perm[slot] = order
-    return BlockedLayout(order=perm, e_pad=e_pad, rows_local=rows_local,
-                         pad_mask=pad_mask, block_row=block_row, R=R, be=be,
-                         n_rows_pad=n_rb * R)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return BlockedLayout(
+        order=perm,
+        e_pad=e_pad,
+        rows_local=rows_local,
+        pad_mask=pad_mask,
+        block_row=block_row,
+        R=R,
+        be=be,
+        n_rows_pad=n_rb * R,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("R", "n_blocks_out", "n_rows"))
 def _run(vals_padded, rows_local, block_row, R, n_blocks_out, n_rows):
+    # deferred Pallas import: blocked_layout stays usable (and this module
+    # importable) on jax builds without Pallas
+    from repro.kernels.segment_sum.kernel import segment_sum_pallas
+
     out = segment_sum_pallas(
-        vals_padded, rows_local[:, None],
-        block_row, n_blocks_out, R=R, interpret=not _on_tpu())
+        vals_padded,
+        rows_local[:, None],
+        block_row,
+        n_blocks_out,
+        R=R,
+        interpret=_platform.interpret_kernels(),
+    )
     return out[:n_rows]
 
 
@@ -78,8 +91,13 @@ def segment_sum_blocked(vals, seg_ids_layout: BlockedLayout, n_rows: int):
     if vals.ndim == 1:
         vals = vals[:, None]
     vp = jnp.zeros((lo.e_pad, vals.shape[1]), vals.dtype)
-    vp = vp.at[jnp.asarray(lo.pad_mask).nonzero(
-        size=int(lo.pad_mask.sum()))[0]].set(vals[jnp.asarray(
-            lo.order[lo.pad_mask])])
-    return _run(vp, jnp.asarray(lo.rows_local), jnp.asarray(lo.block_row),
-                lo.R, lo.n_rows_pad // lo.R, n_rows)
+    slots = jnp.asarray(lo.pad_mask).nonzero(size=int(lo.pad_mask.sum()))[0]
+    vp = vp.at[slots].set(vals[jnp.asarray(lo.order[lo.pad_mask])])
+    return _run(
+        vp,
+        jnp.asarray(lo.rows_local),
+        jnp.asarray(lo.block_row),
+        lo.R,
+        lo.n_rows_pad // lo.R,
+        n_rows,
+    )

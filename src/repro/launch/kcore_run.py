@@ -5,6 +5,7 @@
     PYTHONPATH=src python -m repro.launch.kcore_run --graph FC --mode block_gs
     PYTHONPATH=src python -m repro.launch.kcore_run --graph FC --fused
     PYTHONPATH=src python -m repro.launch.kcore_run --graph ba --mesh 4 --fused
+    PYTHONPATH=src python -m repro.launch.kcore_run --graph ba --fused --dispatch on
 
 Prints the paper's measurement set: total messages, messages/active nodes
 per round, rounds to convergence, work bound, heartbeat-model overhead, and
@@ -49,6 +50,29 @@ def parse_args() -> argparse.Namespace:
         help="run the sharded engine on an N-device ('data',) mesh "
         "(forces N host devices when the platform has fewer)",
     )
+    ap.add_argument(
+        "--platform",
+        default=None,
+        choices=["cpu", "gpu", "tpu"],
+        help="select the jax platform (repro.platform.set_platform)",
+    )
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=0,
+        metavar="N",
+        help="force N host (CPU) devices (repro.platform; applied before "
+        "jax backend init, like REPRO_HOST_DEVICES)",
+    )
+    ap.add_argument(
+        "--dispatch",
+        default=None,
+        choices=["auto", "pallas", "xla", "on", "off"],
+        help="superstep kernel dispatch (repro.core.dispatch): auto routes "
+        "to the Pallas kernels only where they compile natively; on/pallas "
+        "forces them (interpret mode off-TPU), off/xla keeps the XLA "
+        "segment ops. Default: the REPRO_PALLAS env var, else auto",
+    )
     ap.add_argument("--json", action="store_true")
     ap.add_argument(
         "--trace",
@@ -82,6 +106,17 @@ def build_graph(args, generators):
 
 def main() -> None:
     args = parse_args()
+    # platform layer first: env-driven config plus the CLI flags, all of
+    # which must precede the first jax backend init in the process
+    from repro import platform
+
+    platform.configure_from_env()
+    if args.platform:
+        platform.set_platform(args.platform)
+    if args.devices:
+        platform.force_host_device_count(args.devices)
+    if args.dispatch:
+        platform.set_dispatch_mode(args.dispatch)
     if args.mesh:
         # must precede the first jax import anywhere in the process
         flags = os.environ.get("XLA_FLAGS", "")
@@ -130,6 +165,7 @@ def main() -> None:
         "mode": args.mode,
         "backend": args.backend,
         "fused": args.fused,
+        "dispatch": res.dispatch,
         "mesh": args.mesh or 1,
         "correct_vs_BZ": ok,
         "rounds": res.rounds,

@@ -71,6 +71,16 @@ def parse_args():
                          "0 = single device (default)")
     ap.add_argument("--verify", action="store_true",
                     help="check vs the BZ oracle every tick (slow)")
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="select the jax platform (repro.platform)")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="force N host (CPU) devices before backend init "
+                         "(repro.platform; like REPRO_HOST_DEVICES)")
+    ap.add_argument("--dispatch", default=None,
+                    choices=["auto", "pallas", "xla", "on", "off"],
+                    help="superstep kernel dispatch (repro.core.dispatch); "
+                         "default: the REPRO_PALLAS env var, else auto")
     # temporal replay mode (repro.temporal)
     ap.add_argument("--events", default=None, metavar="SRC",
                     help="replay a timestamped event stream instead of "
@@ -213,6 +223,16 @@ def _finish_obs(args, server) -> None:
 
 def main() -> None:
     args = parse_args()
+    # platform layer first: env-driven config plus the CLI flags, all of
+    # which must precede the first jax backend init in the process
+    from repro import platform
+    platform.configure_from_env()
+    if args.platform:
+        platform.set_platform(args.platform)
+    if args.devices:
+        platform.force_host_device_count(args.devices)
+    if args.dispatch:
+        platform.set_dispatch_mode(args.dispatch)
     if args.mesh:
         # must precede the first jax import anywhere in the process
         flags = os.environ.get("XLA_FLAGS", "")

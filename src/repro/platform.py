@@ -1,0 +1,240 @@
+"""Computation-platform configuration layer.
+
+One place (in the spirit of bayespec's ``elisa.util.config``) that decides
+WHERE the supersteps run and HOW the Pallas kernels are dispatched, driven
+by a flag or an environment variable — so the same entry points cover a
+laptop CPU, a forced-multi-device CI lane, and a real TPU/GPU runner:
+
+* ``set_platform("cpu"|"gpu"|"tpu")`` — pick the jax platform (and set the
+  recommended XLA perf flags on GPU).
+* ``force_host_device_count(n)`` — expose ``n`` host (CPU) devices via
+  ``--xla_force_host_platform_device_count``, turning a single machine into
+  an in-process mesh for the sharded/fused-sharded paths. Must run before
+  jax initializes its backends.
+* ``configure_from_env()`` — apply both from ``REPRO_PLATFORM`` /
+  ``REPRO_HOST_DEVICES`` (+ ``REPRO_X64``); idempotent and cheap, called by
+  the CLIs and ``tests/conftest.py`` so one exported variable reconfigures
+  every entry point.
+* ``dispatch_mode()`` — the Pallas kernel-dispatch switch (``REPRO_PALLAS``
+  = ``auto`` | ``on``/``pallas`` | ``off``/``xla``) consumed by
+  ``repro.core.dispatch``: ``auto`` routes the superstep h-index /
+  segment-sum to the Pallas kernels only where they compile natively (TPU),
+  ``on`` forces them everywhere (interpret mode off-TPU — exact, slow;
+  the parity/CI path), ``off`` keeps the plain XLA segment ops.
+* ``peaks()`` — per-backend peak FLOP/s and bytes/s for roofline reporting
+  (``REPRO_PEAK_GFLOPS`` / ``REPRO_PEAK_GBS`` override).
+
+Everything here touches only ``os.environ`` and ``jax.config`` — importing
+this module never initializes a jax backend, so it is always safe to import
+first and configure before the rest of the process touches a device.
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+
+ENV_PLATFORM = "REPRO_PLATFORM"
+ENV_HOST_DEVICES = "REPRO_HOST_DEVICES"
+ENV_DISPATCH = "REPRO_PALLAS"
+ENV_X64 = "REPRO_X64"
+ENV_PEAK_GFLOPS = "REPRO_PEAK_GFLOPS"
+ENV_PEAK_GBS = "REPRO_PEAK_GBS"
+
+_PLATFORMS = ("cpu", "gpu", "tpu")
+
+# jax GPU performance-tips flags (safe no-ops elsewhere; only set when the
+# gpu platform is selected, mirroring SNIPPETS.md snippet 1)
+_GPU_XLA_FLAGS = (
+    "--xla_gpu_triton_gemm_any=True "
+    "--xla_gpu_enable_latency_hiding_scheduler=true "
+    "--xla_gpu_enable_highest_priority_async_stream=true"
+)
+
+_FORCE_DEVICES_FLAG = "--xla_force_host_platform_device_count"
+
+# per-backend (peak FLOP/s, peak bytes/s): TPU numbers match
+# repro.launch.hlo_analysis (v5e-class); GPU ~A100-class; CPU a deliberately
+# round server-core estimate — override via REPRO_PEAK_GFLOPS/REPRO_PEAK_GBS
+# when calibrating a specific machine. Roofline REPORTING only, never used
+# for correctness or dispatch decisions.
+_PEAKS = {
+    "tpu": (197e12, 819e9),
+    "gpu": (312e12, 2.0e12),
+    "cpu": (200e9, 50e9),
+}
+
+_DISPATCH_MODES = ("auto", "pallas", "xla")
+_dispatch_override: str | None = None
+
+
+# ---------------------------------------------------------------------- #
+# Platform / device-count selection
+# ---------------------------------------------------------------------- #
+
+
+def set_platform(platform: str) -> None:
+    """Select the jax platform (cpu/gpu/tpu). Call before backend init."""
+    if platform not in _PLATFORMS:
+        raise ValueError(f"platform must be one of {_PLATFORMS}, got {platform!r}")
+    import jax
+
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_gpu" not in flags:
+            os.environ["XLA_FLAGS"] = f"{flags} {_GPU_XLA_FLAGS}".strip()
+
+
+def force_host_device_count(n: int) -> None:
+    """Expose ``n`` host (CPU) devices to jax — the forced-multi-device lane.
+
+    Rewrites any existing ``--xla_force_host_platform_device_count`` in
+    ``XLA_FLAGS`` instead of appending a duplicate, so repeated calls (or a
+    CLI flag on top of an exported variable) keep a single source of truth.
+    The flag is read when jax initializes its backends; calling this after
+    devices exist has no effect on the live process (jax caches backends),
+    so configure first — the CLIs and conftest do.
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"device count must be >= 1, got {n}")
+    flags = os.environ.get("XLA_FLAGS", "").split()
+    parts = [p for p in flags if not p.startswith(_FORCE_DEVICES_FLAG)]
+    parts.append(f"{_FORCE_DEVICES_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(parts)
+    if _backends_initialized():
+        warnings.warn(
+            "force_host_device_count called after jax backends initialized; "
+            "the new count only affects fresh processes",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+
+
+def _backends_initialized() -> bool:
+    """Best-effort: has this process already materialized jax devices?"""
+    import sys
+
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return False
+    try:
+        from jax._src import xla_bridge
+
+        return bool(xla_bridge._backends)
+    except Exception:  # jax version drift — assume not initialized
+        return False
+
+
+def configure_from_env() -> dict:
+    """Apply ``REPRO_PLATFORM`` / ``REPRO_HOST_DEVICES`` / ``REPRO_X64``.
+
+    Returns the subset of settings that were applied (empty when no
+    variable is set). Safe to call repeatedly and from conftest — it only
+    mutates ``os.environ`` / ``jax.config``, never initializes a backend.
+    """
+    applied: dict = {}
+    platform = os.environ.get(ENV_PLATFORM, "").strip().lower()
+    if platform:
+        set_platform(platform)
+        applied["platform"] = platform
+    ndev = os.environ.get(ENV_HOST_DEVICES, "").strip()
+    if ndev:
+        force_host_device_count(int(ndev))
+        applied["host_devices"] = int(ndev)
+    x64 = os.environ.get(ENV_X64, "").strip().lower()
+    if x64:
+        import jax
+
+        jax.config.update("jax_enable_x64", x64 in ("1", "true", "yes", "on"))
+        applied["x64"] = x64 in ("1", "true", "yes", "on")
+    return applied
+
+
+# ---------------------------------------------------------------------- #
+# Pallas kernel dispatch mode
+# ---------------------------------------------------------------------- #
+
+
+def normalize_dispatch(mode: str) -> str:
+    """Map accepted spellings to the canonical auto/pallas/xla vocabulary."""
+    m = mode.strip().lower()
+    aliases = {
+        "on": "pallas",
+        "1": "pallas",
+        "true": "pallas",
+        "off": "xla",
+        "0": "xla",
+        "false": "xla",
+    }
+    m = aliases.get(m, m)
+    if m not in _DISPATCH_MODES:
+        warnings.warn(
+            f"unknown dispatch mode {mode!r} (want auto/on/off); using auto",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return "auto"
+    return m
+
+
+def dispatch_mode() -> str:
+    """Current kernel-dispatch mode: auto | pallas | xla.
+
+    Priority: ``set_dispatch_mode()`` override (CLI flags), then the
+    ``REPRO_PALLAS`` environment variable, then ``auto``.
+    """
+    if _dispatch_override is not None:
+        return _dispatch_override
+    return normalize_dispatch(os.environ.get(ENV_DISPATCH, "auto"))
+
+
+def set_dispatch_mode(mode: str | None) -> None:
+    """Process-wide dispatch override (None restores env/auto behavior)."""
+    global _dispatch_override
+    _dispatch_override = None if mode is None else normalize_dispatch(mode)
+
+
+def interpret_kernels() -> bool:
+    """Should Pallas kernels run in interpret mode? (anywhere but real TPU)"""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------- #
+# Roofline peaks / summary
+# ---------------------------------------------------------------------- #
+
+
+def peaks(backend: str | None = None) -> tuple[float, float]:
+    """(peak FLOP/s, peak bytes/s) for ``backend`` (default: the active one),
+    with ``REPRO_PEAK_GFLOPS`` / ``REPRO_PEAK_GBS`` overrides."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    flops, membw = _PEAKS.get(backend, _PEAKS["cpu"])
+    gflops = os.environ.get(ENV_PEAK_GFLOPS, "").strip()
+    gbs = os.environ.get(ENV_PEAK_GBS, "").strip()
+    if gflops:
+        flops = float(gflops) * 1e9
+    if gbs:
+        membw = float(gbs) * 1e9
+    return flops, membw
+
+
+def summary() -> dict:
+    """The resolved platform state (for CLI reports; initializes backends)."""
+    import jax
+
+    flops, membw = peaks()
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "dispatch_mode": dispatch_mode(),
+        "interpret_kernels": interpret_kernels(),
+        "peak_gflops": round(flops / 1e9, 1),
+        "peak_gbs": round(membw / 1e9, 1),
+    }

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import dispatch as _dispatch
 from repro.core.cost_model import SeedCostModel, choose_seed
 from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.kcore import (KCoreConfig, _bs_iters, _hindex_by_bsearch,
@@ -583,8 +584,26 @@ class StreamingKCoreEngine:
         src, dst, live, deg = csr.src, csr.dst, csr.live, csr.deg
 
         if mode == "dense":
+            src_p, dst_p, amask_p = self._padded_slots()
+            plan = _dispatch.resolve_plan()
+            if plan.kind == "pallas":
+                # segment-sum route only (ell=None): the slot arrays are
+                # masked/mutable, not a static fully-live adjacency. Arc
+                # contents are baked into the program — a churning stream
+                # re-stages per batch (the documented REPRO_PALLAS=on cost).
+                prog = _dispatch.masked_round_program(
+                    n, n_iters, plan,
+                    np.asarray(src_p, np.int32), np.asarray(dst_p, np.int32))
+                amask_j = jnp.asarray(amask_p)
+
+                def step(est, active):
+                    new_j, ch_j, recv_j = prog(
+                        jnp.asarray(est), amask_j, jnp.asarray(active))
+                    return new_j, np.asarray(ch_j), np.asarray(recv_j)
+
+                return step
             src_j, dst_j, amask_j = (jnp.asarray(a) for a in
-                                     self._padded_slots())
+                                     (src_p, dst_p, amask_p))
 
             def step(est, active):
                 # est stays device-resident across rounds (the loop treats

@@ -44,6 +44,98 @@ def test_hindex_property(rows, width, seed):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
+# ----------------- ELL layout: Pallas vs ref vs segment ops ----------- #
+#
+# The dispatch layer (repro.core.dispatch) claims the Pallas ELL h-index
+# route is bit-equal to the XLA segment-op binary search on any static
+# fully-live adjacency whose degree-0 vertices carry estimate 0. These
+# property tests check that claim on ragged degree-bucketed layouts —
+# including empty (sentinel-padded) rows, empty buckets, and degrees
+# landing exactly on the pow2 bucket-width boundary.
+
+def _ell_round_all(g, est, n_iters, hindex_fn):
+    """One full h-index round over every bucket of g's ELL layout."""
+    from repro.graph.structs import build_ell
+
+    ell = build_ell(g, widths=(2, 4, 8, 32))
+    est_ext = np.concatenate([est, np.zeros(1, np.int32)]).astype(np.int32)
+    new_ext = est_ext.copy()
+    for b in ell.buckets:
+        h = hindex_fn(jnp.asarray(est_ext[b.nbrs]),
+                      jnp.asarray(est_ext[b.ids]), n_iters)
+        new_ext[b.ids] = np.asarray(h, np.int32)
+    return new_ext[: g.n]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 48), st.integers(0, 120), st.integers(0, 1000))
+def test_ell_hindex_pallas_vs_ref_vs_segment(n, e, seed):
+    """Pallas ELL kernel == sort-identity oracle == XLA segment-op binary
+    search, on random ragged graphs with arbitrary (deg-0-zeroed) ests."""
+    from repro.core.kcore import _bs_iters, _hindex_by_bsearch
+    from repro.graph.structs import Graph
+
+    r = np.random.default_rng(seed)
+    edges = r.integers(0, n, (e, 2))
+    g = Graph.from_edges(edges, n=n)
+    hi = max(g.max_deg, 1) * 2 + 1
+    est = r.integers(0, hi, n).astype(np.int32)
+    est[g.deg == 0] = 0          # the ELL-route exactness precondition
+    n_iters = _bs_iters(hi)
+
+    got_pallas = _ell_round_all(
+        g, est, n_iters,
+        lambda nbr, eu, it: hindex_rows(nbr, eu, n_iters=it))
+    got_ref = _ell_round_all(
+        g, est, n_iters, lambda nbr, eu, it: hindex_rows_ref(nbr, eu, it))
+    est_j = jnp.asarray(est)
+    seg = np.asarray(_hindex_by_bsearch(
+        est_j, est_j[jnp.asarray(g.dst)], jnp.asarray(g.src), g.n, n_iters))
+    np.testing.assert_array_equal(got_pallas, got_ref)
+    np.testing.assert_array_equal(got_pallas, seg)
+
+
+def test_ell_hindex_pow2_boundary_and_empty_rows():
+    """Deterministic edge cases: a star whose hub degree sits exactly ON a
+    pow2 bucket width (8), leaf count NOT a row_multiple multiple (so the
+    leaf bucket carries sentinel-padded rows), plus isolated vertices."""
+    from repro.core.kcore import _bs_iters, _hindex_by_bsearch
+    from repro.graph.structs import Graph, build_ell
+
+    # hub 0 -- leaves 1..8 (deg 8 == bucket width), 9..11 isolated
+    edges = [(0, i) for i in range(1, 9)]
+    g = Graph.from_edges(edges, n=12)
+    ell = build_ell(g, widths=(2, 4, 8, 32))
+    assert any(b.width == 8 and b.rows_real == 1 for b in ell.buckets)
+    assert any(b.ids.shape[0] > b.rows_real for b in ell.buckets)
+
+    est = g.deg.astype(np.int32)
+    n_iters = _bs_iters(g.max_deg)
+    got = _ell_round_all(
+        g, est, n_iters,
+        lambda nbr, eu, it: hindex_rows(nbr, eu, n_iters=it))
+    est_j = jnp.asarray(est)
+    seg = np.asarray(_hindex_by_bsearch(
+        est_j, est_j[jnp.asarray(g.dst)], jnp.asarray(g.src), g.n, n_iters))
+    np.testing.assert_array_equal(got, seg)
+    assert (got[9:] == 0).all()          # isolated vertices stay 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 80), st.integers(0, 100))
+def test_segment_sum_int32_bit_exact(E, n, seed):
+    """int32 blocked segment sum is BIT-equal to jax.ops.segment_sum — the
+    exactness the dispatched superstep's message accounting rests on."""
+    r = np.random.default_rng(seed)
+    seg = np.sort(r.integers(0, n, E))    # sorted-COO like arc sources
+    vals = r.integers(0, 2**20, E).astype(np.int32)
+    lo = blocked_layout(seg, n, R=16, be=32)
+    out = np.asarray(segment_sum_blocked(jnp.asarray(vals), lo, n)[:, 0])
+    ref = np.asarray(jax.ops.segment_sum(jnp.asarray(vals),
+                                         jnp.asarray(seg), num_segments=n))
+    np.testing.assert_array_equal(out, ref)
+
+
 # ------------------------- flash attention --------------------------- #
 
 @pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,D", [

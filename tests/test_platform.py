@@ -1,0 +1,124 @@
+"""Platform-config layer (repro.platform): dispatch-mode vocabulary, env
+plumbing, roofline peaks, and the forced-host-device-count lane (the env
+mutation is backend-init-order sensitive, so the device-count assertions
+run in subprocesses)."""
+
+import subprocess
+import sys
+
+import pytest
+
+from repro import platform
+
+_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+        "JAX_PLATFORMS": "cpu"}
+
+
+# ----------------------- dispatch-mode vocabulary ---------------------- #
+
+@pytest.mark.parametrize("raw,want", [
+    ("auto", "auto"), ("pallas", "pallas"), ("xla", "xla"),
+    ("on", "pallas"), ("1", "pallas"), ("true", "pallas"),
+    ("off", "xla"), ("0", "xla"), ("false", "xla"),
+    ("  ON ", "pallas"), ("Off", "xla"),
+])
+def test_normalize_dispatch(raw, want):
+    assert platform.normalize_dispatch(raw) == want
+
+
+def test_normalize_dispatch_unknown_warns_and_defaults():
+    with pytest.warns(RuntimeWarning, match="unknown dispatch mode"):
+        assert platform.normalize_dispatch("vulkan") == "auto"
+
+
+def test_dispatch_mode_priority(monkeypatch):
+    """Override beats env beats the auto default."""
+    monkeypatch.delenv(platform.ENV_DISPATCH, raising=False)
+    platform.set_dispatch_mode(None)
+    assert platform.dispatch_mode() == "auto"
+    monkeypatch.setenv(platform.ENV_DISPATCH, "on")
+    assert platform.dispatch_mode() == "pallas"
+    platform.set_dispatch_mode("off")
+    try:
+        assert platform.dispatch_mode() == "xla"
+    finally:
+        platform.set_dispatch_mode(None)
+    assert platform.dispatch_mode() == "pallas"
+
+
+def test_set_platform_rejects_unknown():
+    with pytest.raises(ValueError, match="platform must be one of"):
+        platform.set_platform("abacus")
+
+
+# ----------------------------- peaks ----------------------------------- #
+
+def test_peaks_defaults_and_env_override(monkeypatch):
+    monkeypatch.delenv(platform.ENV_PEAK_GFLOPS, raising=False)
+    monkeypatch.delenv(platform.ENV_PEAK_GBS, raising=False)
+    flops, bw = platform.peaks("tpu")
+    assert flops == 197e12 and bw == 819e9   # matches launch.hlo_analysis
+    monkeypatch.setenv(platform.ENV_PEAK_GFLOPS, "123")
+    monkeypatch.setenv(platform.ENV_PEAK_GBS, "45")
+    flops, bw = platform.peaks("cpu")
+    assert flops == 123e9 and bw == 45e9
+
+
+def test_summary_reports_resolved_state():
+    s = platform.summary()
+    assert s["backend"] in ("cpu", "gpu", "tpu")
+    assert s["device_count"] >= 1
+    assert s["dispatch_mode"] in ("auto", "pallas", "xla")
+    assert s["peak_gflops"] > 0 and s["peak_gbs"] > 0
+
+
+# ----------------------- forced host device count ---------------------- #
+
+def test_force_host_device_count_rewrites_flag(monkeypatch):
+    monkeypatch.setenv(
+        "XLA_FLAGS",
+        "--xla_force_host_platform_device_count=2 --xla_foo=bar")
+    import os
+
+    import warnings
+    with warnings.catch_warnings():
+        # jax backends are already live in this test process — the warning
+        # about late configuration is expected and not under test here
+        warnings.simplefilter("ignore", RuntimeWarning)
+        platform.force_host_device_count(8)
+    flags = os.environ["XLA_FLAGS"].split()
+    assert "--xla_force_host_platform_device_count=8" in flags
+    assert "--xla_foo=bar" in flags
+    assert sum(f.startswith("--xla_force_host_platform_device_count")
+               for f in flags) == 1
+
+
+def test_force_host_device_count_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        platform.force_host_device_count(0)
+
+
+def test_configure_from_env_forces_devices_subprocess():
+    """REPRO_HOST_DEVICES=4 + configure_from_env() before backend init →
+    jax sees 4 host devices (the CI forced-multi-device lane mechanism)."""
+    script = (
+        "import repro.platform as p\n"
+        "applied = p.configure_from_env()\n"
+        "assert applied == {'host_devices': 4}, applied\n"
+        "import jax\n"
+        "assert jax.device_count() == 4, jax.device_count()\n"
+        "print('OK')\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env={**_ENV, "REPRO_HOST_DEVICES": "4"}, cwd="/root/repo",
+        timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert proc.stdout.strip().endswith("OK")
+
+
+def test_configure_from_env_noop_without_vars(monkeypatch):
+    for var in (platform.ENV_PLATFORM, platform.ENV_HOST_DEVICES,
+                platform.ENV_X64):
+        monkeypatch.delenv(var, raising=False)
+    assert platform.configure_from_env() == {}

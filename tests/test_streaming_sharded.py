@@ -125,6 +125,10 @@ def test_sharded_streaming_multidevice(ndev, mesh_shape, axes):
     batches give identical cores and message bills on real multi-device
     meshes, for both the per-round sharded mode and the fused while_loop
     (ISSUE 4 acceptance: fused exact on 1- and 2-axis meshes)."""
+    import jax
+
+    if jax.device_count() >= 4:
+        pytest.skip("in-process multi-device lane covers this")
     script = _SCRIPT.format(ndev=ndev, mesh_shape=mesh_shape,
                             axes=tuple(axes))
     proc = subprocess.run(
@@ -137,3 +141,43 @@ def test_sharded_streaming_multidevice(ndev, mesh_shape, axes):
     assert proc.returncode == 0, proc.stderr[-2000:]
     out = json.loads(proc.stdout.strip().splitlines()[-1])
     assert len(out["rounds"]) == 3
+
+
+@pytest.mark.parametrize("mesh_shape,axes", [
+    ((4,), ("data",)),
+    ((2, 2), ("data", "model")),
+])
+def test_sharded_streaming_multidevice_inprocess(mesh_shape, axes):
+    """The subprocess parity sweep run IN-PROCESS on the forced-multi-device
+    lane (conftest applied REPRO_HOST_DEVICES before backend init)."""
+    import jax
+
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices (REPRO_HOST_DEVICES lane)")
+    g = gen.barabasi_albert(400, 4, seed=2)
+    mesh = make_mesh(mesh_shape, axes)
+    dense = StreamingKCoreEngine(g, StreamingConfig(frontier="dense"))
+    shard = StreamingKCoreEngine(g, StreamingConfig(frontier="sharded"),
+                                 mesh=mesh, axis_names=axes)
+    fused = StreamingKCoreEngine(g, StreamingConfig(frontier="fused"),
+                                 mesh=mesh, axis_names=axes)
+    rng = np.random.default_rng(0)
+    edges = canonical_edges(g)
+    batches = [
+        EdgeBatch.make(insert=rng.integers(0, g.n, size=(15, 2))),
+        EdgeBatch.make(delete=edges[rng.choice(edges.shape[0], 15,
+                                               replace=False)]),
+        random_churn_batch(g, 12, 12, rng),
+    ]
+    for b in batches:
+        r1, r2 = dense.apply_batch(b), shard.apply_batch(b)
+        r3 = fused.apply_batch(b)
+        assert r3.mode == "fused_sharded", r3.mode
+        assert (r1.core == r2.core).all()
+        assert (r1.stats.messages_per_round
+                == r2.stats.messages_per_round).all()
+        assert (r1.core == r3.core).all()
+        assert (r1.stats.messages_per_round
+                == r3.stats.messages_per_round).all()
+        assert r1.rounds == r3.rounds
+        assert (r1.core == bz_core_numbers(dense.graph)).all()
