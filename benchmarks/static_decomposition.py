@@ -35,6 +35,7 @@ import numpy as np
 from benchmarks.common import SCALE, csv_row, graph_for
 from repro.core import bz_core_numbers, kcore_decompose, work_bound
 from repro.core.messages import heartbeat_overhead
+from repro.obs import flight, health
 
 GRAPHS = tuple(os.environ.get("REPRO_STATIC_BENCH_GRAPHS", "EEN,G31,FC,PTBR,MGF").split(","))
 
@@ -58,6 +59,9 @@ COLUMNS = (
     "heartbeats",
     "recompiles",
     "speedup",
+    "flight_ms",
+    "flight_records",
+    "health_ok",
     "bit_equal",
     "oracle_ok",
 )
@@ -95,7 +99,29 @@ def run_records() -> list[dict]:
         fused_warm = kcore_decompose(g, fused=True)
         fused_s = time.perf_counter() - t0
 
-        bit_equal = _bit_equal(host, fused) and _bit_equal(host, fused_warm)
+        # fourth run: fused again UNDER the flight recorder + invariant
+        # monitor — measures the observability wall and re-asserts the
+        # accounting is untouched by recording
+        flight.enable()
+        health.install()
+        flight.reset()
+        health.reset()
+        try:
+            t0 = time.perf_counter()
+            fused_flight = kcore_decompose(g, fused=True)
+            flight_s = time.perf_counter() - t0
+            flight_records = flight.get_recorder().rounds_recorded
+            health_ok = health.ok()
+        finally:
+            flight.disable()
+            flight.reset()
+            health.reset()
+
+        bit_equal = (
+            _bit_equal(host, fused)
+            and _bit_equal(host, fused_warm)
+            and _bit_equal(host, fused_flight)
+        )
         assert bit_equal, (
             f"{abbrev}: fused decomposition diverged from the host loop "
             "(cores or per-round accounting)"
@@ -129,6 +155,11 @@ def run_records() -> list[dict]:
                 "heartbeats": int(heartbeat_overhead(host.stats)["heartbeat_messages"]),
                 "recompiles": fused.recompiles,
                 "speedup": round(host_s / max(fused_s, 1e-9), 2),
+                # warm fused wall with the flight recorder on, and what it
+                # captured (overhead target: see temporal_replay)
+                "flight_ms": round(flight_s * 1e3, 3),
+                "flight_records": flight_records,
+                "health_ok": health_ok,
                 "bit_equal": bit_equal,
                 "oracle_ok": ok,
             }

@@ -37,6 +37,8 @@ from benchmarks.common import csv_row
 from repro.core import bz_core_numbers, kcore_decompose
 from repro.core.messages import heartbeat_overhead
 from repro.graph import generators as gen
+from repro.obs.health import InvariantMonitor
+from repro.obs.metrics import MetricsRegistry
 from repro.streaming import (StreamingConfig, StreamingKCoreEngine,
                              apply_batch, random_churn_batch)
 
@@ -51,7 +53,7 @@ COLUMNS = ("graph", "n", "m", "churn", "batch", "inserted", "deleted",
            "scratch_rounds", "region", "mode", "patch_ms", "seed_ms",
            "converge_ms", "reconstruct_ms", "rebuild_ms", "heartbeats",
            "recompiles", "compactions", "dead_frac", "occupancy",
-           "sharded_ok", "oracle_ok")
+           "sharded_ok", "bill_invariant", "oracle_ok")
 
 
 def settings() -> dict:
@@ -63,6 +65,11 @@ def run_records() -> list[dict]:
     """Structured per-batch records (the CSV in run() and the JSON artifact
     in streaming_gate both render these)."""
     records = []
+    # message-bill mode-invariance, checked through the invariant monitor
+    # (repro.obs.health): the dense and sharded engines bill each batch
+    # under the same key — differing totals raise an anomaly. A local
+    # registry keeps the bench from polluting the process-wide metrics.
+    monitor = InvariantMonitor(registry=MetricsRegistry())
     for abbrev in GRAPHS:
         entry = gen.SNAP_BY_ABBREV[abbrev]
         scale = TARGET_N / entry.n
@@ -91,6 +98,16 @@ def run_records() -> list[dict]:
                 assert sharded_ok, (
                     f"{abbrev} churn={churn} batch={t}: sharded engine "
                     "diverged from the single-device engine")
+                before = monitor.anomalies
+                key = (abbrev, churn, t)
+                monitor.observe_bill(key, "dense",
+                                     int(res.total_messages))
+                monitor.observe_bill(key, "sharded",
+                                     int(res_sh.total_messages))
+                bill_invariant = monitor.anomalies == before
+                assert bill_invariant, (
+                    f"{abbrev} churn={churn} batch={t}: "
+                    f"mode bill mismatch: {monitor.last}")
 
                 scratch = kcore_decompose(eng.graph)
                 ok = bool((res.core == bz_core_numbers(eng.graph)).all())
@@ -129,7 +146,8 @@ def run_records() -> list[dict]:
                     "compactions": res.csr_compactions,
                     "dead_frac": round(res.csr_dead_frac, 4),
                     "occupancy": round(res.csr_occupancy, 4),
-                    "sharded_ok": sharded_ok, "oracle_ok": ok,
+                    "sharded_ok": sharded_ok,
+                    "bill_invariant": bill_invariant, "oracle_ok": ok,
                 })
     return records
 

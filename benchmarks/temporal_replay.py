@@ -66,7 +66,8 @@ COLUMNS = ("trace", "n", "events", "window", "stride", "step", "m",
            "rounds", "frontier_peak", "mode", "patch_ms", "seed_ms",
            "converge_ms", "reconstruct_ms", "step_ms", "ms_per_round",
            "heartbeats", "recompiles", "compactions", "dead_frac",
-           "occupancy", "core_max", "oracle_ok")
+           "occupancy", "core_max", "oracle_ok", "flight_rounds",
+           "health_ok")
 
 
 def traces() -> list[tuple[str, object, float, float, str]]:
@@ -140,6 +141,9 @@ def run_records() -> list[dict]:
                 "occupancy": rec.csr_occupancy,
                 "core_max": rec.core_max,
                 "oracle_ok": bool(rec.oracle_ok),
+                # flight-recorder join (zeros/"" unless recording is on)
+                "flight_rounds": rec.flight_rounds,
+                "health_ok": "" if rec.health_ok is None else rec.health_ok,
             })
     return records
 
@@ -166,6 +170,41 @@ def summarize(records: list[dict]) -> dict:
     } for trace, rs in out.items()}
 
 
+def flight_overhead() -> dict:
+    """Measured flight-recorder cost on the fused EEN replay.
+
+    Three replays of the same trace: a warmup (pays the XLA compiles,
+    discarded), recorder OFF, recorder ON (+ invariant monitor). The
+    overhead is the ON/OFF delta of the summed step walls — the ISSUE 8
+    acceptance budget is <= 3% on the 10k-vertex fused EEN replay."""
+    from repro.obs import flight, health
+
+    name, log, window, stride, by = traces()[0]   # EEN
+
+    def one_replay() -> float:
+        traj = replay(log, window, stride, by=by,
+                      config=StreamingConfig(frontier=FRONTIER),
+                      max_steps=STEPS)
+        return float(traj.series("step_ms").sum())
+
+    one_replay()                      # warmup
+    off_ms = one_replay()
+    flight.enable()
+    health.install()
+    try:
+        on_ms = one_replay()
+        rounds = flight.get_recorder().rounds_recorded
+        status = health.verdict()["status"]
+    finally:
+        flight.disable()
+        flight.reset()
+        health.reset()
+    overhead = 100.0 * (on_ms - off_ms) / max(off_ms, 1e-9)
+    return {"trace": name, "off_ms": round(off_ms, 1),
+            "on_ms": round(on_ms, 1), "overhead_pct": round(overhead, 2),
+            "flight_rounds": rounds, "health": status}
+
+
 def run() -> list[str]:
     records = run_records()
     rows = [csv_row(*COLUMNS)]
@@ -179,4 +218,7 @@ def run() -> list[str]:
                     recompiles=s["recompiles"],
                     compactions=s["compactions"])
         rows.append(csv_row(*(mean[c] for c in COLUMNS)))
+    fo = flight_overhead()
+    rows.append("# flight_overhead "
+                + " ".join(f"{k}={v}" for k, v in fo.items()))
     return rows

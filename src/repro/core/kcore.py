@@ -45,6 +45,7 @@ from jax import lax
 from repro.core import dispatch as _dispatch
 from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.messages import MessageStats
+from repro.obs import flight as _flight
 from repro.obs import trace as _trace
 from repro.graph.partition import ShardedGraph
 from repro.graph.structs import EllGraph, Graph
@@ -434,6 +435,17 @@ def _decompose_body(g: Graph, config: KCoreConfig,
     active = [n, int((g.deg > 0).sum())]
     changed_counts = [n]
 
+    # flight recorder: one run per decomposition, round 0 = the degree
+    # broadcast. Disabled path = one attribute read; every est host-copy
+    # and per-round clock below is guarded by rec.active.
+    rec = _flight.recorder()
+    if rec.active:
+        rec.start_run(
+            "static",
+            "fused" if use_fused else f"{config.mode}/{config.backend}",
+            n=n)
+        rec.record_round(active[0], msgs[0], changed_counts[0], est=g.deg)
+
     if use_fused:
         from repro.core.runtime import fused_converge_dense
 
@@ -449,11 +461,14 @@ def _decompose_body(g: Graph, config: KCoreConfig,
         # round 1 of the fused loop IS round 1 of the host loop, and the
         # recv-masked rounds after it are exact for the monotone locality
         # operator (an inactive vertex's inputs are unchanged)
+        # frontier1: the while_loop activates everyone but the accounting
+        # bills only (deg>0) receivers in round 1 — pass the accounting
+        # value so flight records match the host loop bit-for-bit
         outcome = fused_converge_dense(
             g.deg, np.ones(n, bool), g.src, g.dst,
             np.ones(g.num_arcs, bool), g.deg,
             n=n, n_iters=n_iters, max_rounds=max_rounds,
-            dispatch=plan.kind, ell=ell)
+            dispatch=plan.kind, ell=ell, frontier1=active[1])
         rounds, converged = outcome.rounds, outcome.converged
         dispatch_kind = outcome.dispatch
         msgs.extend(outcome.msgs.tolist())
@@ -487,6 +502,7 @@ def _decompose_body(g: Graph, config: KCoreConfig,
         rounds, converged = 0, False
         t_conv = time.perf_counter()
         while rounds < max_rounds:
+            t_r = time.perf_counter() if rec.active else 0.0
             with _trace.span("kcore.round", round=rounds) as rsp:
                 new_est, changed, recv = step(est)
                 rounds += 1
@@ -498,6 +514,12 @@ def _decompose_body(g: Graph, config: KCoreConfig,
                 changed_counts.append(int(ch_np.sum()))
                 active.append(int(np.asarray(recv).sum()))
                 rsp.set(messages=msgs[-1], changed=changed_counts[-1])
+                if rec.active:
+                    rec.record_round(
+                        active[rounds], msgs[-1], changed_counts[-1],
+                        est=np.asarray(new_est), prev_est=np.asarray(est),
+                        host_s=time.perf_counter() - t_r,
+                        dispatch=dispatch_kind)
                 est = new_est
         phase_s["converge"] = time.perf_counter() - t_conv
         core = np.asarray(est, np.int32)
@@ -514,6 +536,7 @@ def _decompose_body(g: Graph, config: KCoreConfig,
         rounds, converged = 0, False
         t_conv = time.perf_counter()
         while rounds < max_rounds:
+            t_r = time.perf_counter() if rec.active else 0.0
             with _trace.span("kcore.round", round=rounds):
                 new_ext, changed = round_fn(est_ext)
                 rounds += 1
@@ -526,6 +549,13 @@ def _decompose_body(g: Graph, config: KCoreConfig,
                 # receivers: any vertex adjacent to a changed vertex
                 recv = _receivers_np(g, ch_np)
                 active.append(int(recv.sum()))
+                if rec.active:
+                    rec.record_round(
+                        active[rounds], msgs[-1], changed_counts[-1],
+                        est=np.asarray(new_ext)[:n],
+                        prev_est=np.asarray(est_ext)[:n],
+                        host_s=time.perf_counter() - t_r,
+                        dispatch=dispatch_kind)
                 est_ext = new_ext
         phase_s["converge"] = time.perf_counter() - t_conv
         core = np.asarray(est_ext[:n], np.int32)
@@ -538,6 +568,7 @@ def _decompose_body(g: Graph, config: KCoreConfig,
         rounds, converged = 0, False
         t_conv = time.perf_counter()
         while rounds < max_rounds:
+            t_r = time.perf_counter() if rec.active else 0.0
             with _trace.span("kcore.round", round=rounds):
                 new_est, changed = round_fn(est)
                 rounds += 1
@@ -548,6 +579,13 @@ def _decompose_body(g: Graph, config: KCoreConfig,
                 msgs.append(int(deg64[ch_real].sum()))
                 changed_counts.append(int(ch_real.sum()))
                 active.append(int(_receivers_np(g, ch_real).sum()))
+                if rec.active:
+                    rec.record_round(
+                        active[rounds], msgs[-1], changed_counts[-1],
+                        est=np.asarray(new_est)[: g.n],
+                        prev_est=np.asarray(est)[: g.n],
+                        host_s=time.perf_counter() - t_r,
+                        dispatch=dispatch_kind)
                 est = new_est
         phase_s["converge"] = time.perf_counter() - t_conv
         core = np.asarray(est)[: g.n].astype(np.int32)
@@ -561,6 +599,8 @@ def _decompose_body(g: Graph, config: KCoreConfig,
         active_per_round=np.asarray(active[: len(msgs)], np.int64),
         changed_per_round=np.asarray(changed_counts[: len(msgs)], np.int64),
     )
+    if rec.active:
+        rec.end_run(converged=converged, messages=int(stats.total_messages))
     return KCoreResult(core=core, rounds=rounds, converged=converged,
                        stats=stats,
                        recompiles=compile_count() - compiles0,
@@ -715,6 +755,12 @@ def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
     changed_counts = [g.n]
     cap = max_rounds if max_rounds is not None else g.n + 1
 
+    rec = _flight.recorder()
+    if rec.active:
+        rec.start_run("static", "fused_sharded" if fused else "sharded",
+                      n=g.n)
+        rec.record_round(active[0], msgs[0], changed_counts[0], est=g.deg)
+
     with _trace.span("kcore.decompose", n=g.n, m=g.m, mode="sharded",
                      mesh_devices=n_dev, fused=bool(fused)) as _sp:
         if fused:
@@ -722,7 +768,8 @@ def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
 
             outcome = fused_converge_sharded(
                 g.deg, np.ones(g.n, bool), sg, mesh, tuple(axis_names),
-                n=g.n, n_iters=n_iters, max_rounds=cap)
+                n=g.n, n_iters=n_iters, max_rounds=cap,
+                frontier1=active[1])
             rounds, converged = outcome.rounds, outcome.converged
             msgs.extend(outcome.msgs.tolist())
             changed_counts.extend(outcome.changed.tolist())
@@ -743,6 +790,7 @@ def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
             rounds, converged = 0, False
             t_conv = time.perf_counter()
             while rounds < cap:
+                t_r = time.perf_counter() if rec.active else 0.0
                 with _trace.span("kcore.round", round=rounds) as rsp:
                     new_est, m, any_ch = superstep(est, src, dst, amask, deg)
                     rounds += 1
@@ -754,6 +802,12 @@ def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
                     changed_counts.append(int(ch_real.sum()))
                     active.append(int(_receivers_np(g, ch_real).sum()))
                     rsp.set(messages=msgs[-1], changed=changed_counts[-1])
+                    if rec.active:
+                        rec.record_round(
+                            active[rounds], msgs[-1], changed_counts[-1],
+                            est=np.asarray(new_est).reshape(-1)[: g.n],
+                            prev_est=np.asarray(est).reshape(-1)[: g.n],
+                            host_s=time.perf_counter() - t_r)
                     est = new_est
             phase_s["converge"] = time.perf_counter() - t_conv
             core = np.asarray(est).reshape(-1)[: g.n].astype(np.int32)
@@ -762,6 +816,8 @@ def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
     stats = MessageStats(np.asarray(msgs, np.int64),
                          np.asarray(active[: len(msgs)], np.int64),
                          np.asarray(changed_counts[: len(msgs)], np.int64))
+    if rec.active:
+        rec.end_run(converged=converged, messages=int(stats.total_messages))
     return KCoreResult(core=core, rounds=rounds, converged=converged,
                        stats=stats,
                        recompiles=compile_count() - compiles0,

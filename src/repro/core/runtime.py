@@ -48,7 +48,7 @@ from repro.core.kcore import (
     fused_convergence,
     fused_round_stats,
 )
-from repro.obs import trace
+from repro.obs import flight, trace
 
 
 @dataclasses.dataclass
@@ -78,7 +78,9 @@ class FusedOutcome:
     dispatch: str = "xla"
 
 
-def _finish(span, raw, rounds_raw, t_dev, compiles0, csecs0, est_of, dispatch="xla"):
+def _finish(
+    span, raw, rounds_raw, t_dev, compiles0, csecs0, est_of, dispatch="xla", frontier1=None, seed=None
+):
     """Shared tail of both fused paths: block, time phases, reconstruct."""
     t0 = time.perf_counter()
     r, stop, final_act, mb, cb, rb = raw
@@ -105,10 +107,30 @@ def _finish(span, raw, rounds_raw, t_dev, compiles0, csecs0, est_of, dispatch="x
         compile_delta=outcome.compile_delta,
         compile_s=round(outcome.compile_s, 6),
     )
+    # flight capture, reconstructed post-hoc from the while_loop stat
+    # buffers: exactly the rounds a host loop would have recorded, same
+    # accounting arrays. No-op (single attribute read) when disabled.
+    rec = flight.recorder()
+    if rec.active:
+        rec.record_fused_rounds(
+            outcome.msgs,
+            outcome.changed,
+            outcome.recv,
+            frontier1=int(frontier1) if frontier1 is not None else (
+                int(outcome.recv[0]) if len(outcome.recv) else 0
+            ),
+            device_s=t_dev,
+            compiles=outcome.compile_delta,
+            dispatch=dispatch,
+            seed=seed,
+            final=est,
+        )
     return outcome
 
 
-def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, max_rounds, dispatch=None, ell=None):
+def fused_converge_dense(
+    seed, active, src, dst, arc_mask, deg, *, n, n_iters, max_rounds, dispatch=None, ell=None, frontier1=None
+):
     """Single-device fused convergence over (padded) arc arrays.
 
     ``src``/``dst``/``arc_mask`` may be numpy or already-device arrays; the
@@ -126,6 +148,17 @@ def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, m
     """
     compiles0, csecs0 = compile_count(), compile_seconds()
     plan = _dispatch.resolve_plan(dispatch)
+    # flight bookkeeping resolved up front, BEFORE device work: the
+    # accounting round-1 frontier (callers override when their while_loop
+    # activation differs from the accounting convention) and a host copy
+    # of the seed for the aggregate drop histogram. Zero work when the
+    # recorder is disabled.
+    rec = flight.recorder()
+    seed_np = None
+    if rec.active:
+        if frontier1 is None:
+            frontier1 = int(np.asarray(active).sum())
+        seed_np = np.asarray(seed, np.int64).copy()
     with trace.span("fused-converge", n=n, max_rounds=max_rounds, dispatch=plan.kind) as span:
         with trace.span("device-converge"):
             t0 = time.perf_counter()
@@ -172,10 +205,12 @@ def fused_converge_dense(seed, active, src, dst, arc_mask, deg, *, n, n_iters, m
                 csecs0,
                 lambda: np.asarray(est_j, np.int32),
                 dispatch=plan.kind,
+                frontier1=frontier1,
+                seed=seed_np,
             )
 
 
-def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, max_rounds):
+def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, max_rounds, frontier1=None):
     """Fused convergence with the masked shard_map superstep nested inside.
 
     ``sg`` is a ``repro.graph.partition.ShardedGraph`` (from ``shard_graph``
@@ -184,6 +219,12 @@ def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, ma
     are padded/reshaped to the shard layout here.
     """
     compiles0, csecs0 = compile_count(), compile_seconds()
+    rec = flight.recorder()
+    seed_np = None
+    if rec.active:
+        if frontier1 is None:
+            frontier1 = int(np.asarray(active).sum())
+        seed_np = np.asarray(seed, np.int64).copy()
     with trace.span("fused-converge", n=n, max_rounds=max_rounds, mesh_devices=sg.n_shards) as span:
         prog = _fused_sharded_convergence(
             mesh, tuple(axis_names), sg.verts_per_shard, n_iters, max_rounds
@@ -214,4 +255,6 @@ def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, ma
                 compiles0,
                 csecs0,
                 lambda: np.asarray(est_j).reshape(-1)[:n].astype(np.int32),
+                frontier1=frontier1,
+                seed=seed_np,
             )

@@ -84,9 +84,34 @@ def parse_args() -> argparse.Namespace:
     ap.add_argument(
         "--metrics",
         action="store_true",
-        help="dump the process metrics registry (JSON) after the run",
+        help="dump the process metrics registry after the run "
+        "(see --metrics-format / --metrics-out)",
+    )
+    ap.add_argument(
+        "--metrics-format",
+        default="json",
+        choices=["json", "prom"],
+        help="stdout format for --metrics: structured JSON (default) or "
+        "the Prometheus text exposition format",
+    )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="PATH",
+        help="also write the metrics registry to a file (implies "
+        "--metrics); format inferred from the extension: .prom/.txt -> "
+        "Prometheus text, anything else -> JSON",
+    )
+    ap.add_argument(
+        "--flight",
+        default=None,
+        metavar="OUT.json",
+        help="enable the convergence flight recorder + invariant monitor "
+        "and dump the per-round ring and health verdict as JSON",
     )
     args = ap.parse_args()
+    if args.metrics_out:
+        args.metrics = True
     if args.mesh and (args.mode != "jacobi" or args.backend != "segment"):
         # the sharded engine is jacobi/segment only; refuse rather than
         # silently running (and reporting) a different mode than asked
@@ -138,6 +163,11 @@ def main() -> None:
 
     if args.trace:
         trace.enable()
+    if args.flight:
+        from repro.obs import flight, health
+
+        flight.enable()
+        health.install()
 
     g = build_graph(args, generators)
     t0 = time.perf_counter()
@@ -203,7 +233,29 @@ def main() -> None:
         metrics.gauge("kcore_wall_seconds", **labels).set(wall)
         for phase, secs in res.phase_s.items():
             metrics.gauge("kcore_phase_seconds", graph=args.graph, phase=phase).set(secs)
-        print(json.dumps({"metrics": metrics.to_json()}, indent=1))
+        if args.metrics_format == "prom":
+            print(metrics.to_prometheus(), end="")
+        else:
+            print(json.dumps({"metrics": metrics.to_json()}, indent=1))
+        if args.metrics_out:
+            prom_file = args.metrics_out.endswith((".prom", ".txt"))
+            with open(args.metrics_out, "w") as f:
+                if prom_file:
+                    f.write(metrics.to_prometheus())
+                else:
+                    json.dump({"metrics": metrics.to_json()}, f, indent=1)
+            print(f"metrics: {args.metrics_out} ({'prom' if prom_file else 'json'})")
+    if args.flight:
+        from repro.obs import flight, health
+
+        payload = flight.to_json()
+        payload["health"] = health.verdict()
+        with open(args.flight, "w") as f:
+            json.dump(payload, f)
+        print(
+            f"flight: {args.flight} (runs={payload['runs']} "
+            f"rounds={payload['rounds_recorded']} health={payload['health']['status']})"
+        )
     assert ok, "core numbers disagree with BZ oracle!"
 
 

@@ -102,6 +102,17 @@ def parse_args():
     ap.add_argument("--metrics", action="store_true",
                     help="dump the server metrics registry (JSON, incl. "
                          "per-op latency histograms) after the run")
+    ap.add_argument("--listen", type=int, default=None, metavar="PORT",
+                    help="serve live observability over HTTP while the "
+                         "loop runs: /metrics (Prometheus), /healthz "
+                         "(invariant-monitor verdict), /debug/flight "
+                         "(recent convergence rounds). Implies the flight "
+                         "recorder + invariant monitor. 0 = ephemeral port")
+    ap.add_argument("--flight", default=None, metavar="OUT.json",
+                    help="enable the convergence flight recorder + "
+                         "invariant monitor and dump the round ring, "
+                         "watch timelines, and health verdict as JSON "
+                         "after the run")
     return ap.parse_args()
 
 
@@ -148,7 +159,7 @@ def build_event_log(args):
     return temporal.load_event_log(src)
 
 
-def replay_serve(args, mesh) -> None:
+def replay_serve(args, mesh, httpd=None) -> None:
     """Temporal replay loop: window advances + query load + as-of probes."""
     import numpy as np
 
@@ -163,6 +174,8 @@ def replay_serve(args, mesh) -> None:
                                    frontier=args.frontier),
                                mesh=mesh)
     server = KCoreServer(windowed=weng, asof_capacity=args.asof_capacity)
+    if httpd is not None:
+        httpd.add_registry(server.metrics)
     print(f"# events={args.events} n={log.n} log_events={len(log)} "
           f"adds={log.num_adds} window={args.window} stride={args.stride} "
           f"by={args.by} mesh={args.mesh or 1} frontier={args.frontier} "
@@ -210,7 +223,7 @@ def replay_serve(args, mesh) -> None:
 
 
 def _finish_obs(args, server) -> None:
-    """Shared --trace/--metrics tail of both serving loops."""
+    """Shared --trace/--metrics/--flight tail of both serving loops."""
     if args.trace:
         from repro.obs import trace
         trace.export(args.trace)
@@ -219,6 +232,17 @@ def _finish_obs(args, server) -> None:
         import json as _json
         print(_json.dumps({"server_metrics": server.metrics.to_json()},
                           indent=1))
+    if args.flight:
+        import json as _json
+
+        from repro.obs import flight, health
+        payload = flight.to_json()
+        payload["health"] = health.verdict()
+        with open(args.flight, "w") as f:
+            _json.dump(payload, f)
+        print(f"# flight: {args.flight} "
+              f"(runs={payload['runs']} rounds={payload['rounds_recorded']} "
+              f"health={payload['health']['status']})")
 
 
 def main() -> None:
@@ -240,6 +264,20 @@ def main() -> None:
             f"{flags} --xla_force_host_platform_device_count={args.mesh}"
         ).strip()
 
+    # live observability starts BEFORE the heavy jax init below, so
+    # external pollers can already reach /healthz while the backend and
+    # the initial decomposition warm up (repro.obs is stdlib+numpy only)
+    httpd = None
+    if args.listen is not None or args.flight:
+        from repro.obs import flight, health
+        flight.enable()
+        health.install()
+        if args.listen is not None:
+            from repro.obs.http import start_server
+            httpd = start_server(port=args.listen)
+            print(f"# obs: listening on {httpd.url} "
+                  "(/metrics /healthz /debug/flight)", flush=True)
+
     import numpy as np
 
     from repro.core import bz_core_numbers, kcore_decompose
@@ -259,13 +297,15 @@ def main() -> None:
         trace.enable()
 
     if args.events:
-        replay_serve(args, mesh)
+        replay_serve(args, mesh, httpd=httpd)
         return
 
     g = build_graph(args, generators)
     t0 = time.perf_counter()
     server = KCoreServer(g, StreamingConfig(frontier=args.frontier),
                          mesh=mesh)
+    if httpd is not None:
+        httpd.add_registry(server.metrics)
     print(f"# graph={args.graph} n={g.n} m={g.m} mesh={args.mesh or 1} "
           f"frontier={args.frontier} "
           f"init_messages={server.engine.init_result.stats.total_messages} "

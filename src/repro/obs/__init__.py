@@ -10,7 +10,18 @@ Dependency-free (stdlib-only) measurement substrate for the whole repo:
     reservoir histograms (p50/p95/p99), exportable as JSON and the
     Prometheus text format;
   * ``validate`` — Chrome-trace schema/nesting/coverage validator
-    (``python -m repro.obs.validate``), the CI gate for exported traces.
+    (``python -m repro.obs.validate``), the CI gate for exported traces;
+  * ``flight``   — convergence flight recorder: a bounded ring of
+    per-round records (frontier, messages, estimate-drop histogram,
+    device/host wall) captured in every execution mode, with opt-in
+    per-vertex trajectory watchlists;
+  * ``health``   — online invariant monitor over the flight stream
+    (monotone estimates, frontier progress, message-bill
+    mode-invariance) feeding anomalies into the tracer and a health
+    gauge into the metrics registry;
+  * ``http``     — dependency-free threaded endpoint serving
+    ``/metrics``, ``/healthz``, and ``/debug/flight`` live
+    (``kcore_serve --listen``).
 
 The hot paths are instrumented permanently (host round loop, fused
 runtime, streaming batch phases, window advances, the serving loop, XLA
@@ -19,7 +30,10 @@ until ``trace.enable()`` — surfaced as ``--trace out.json`` /
 ``--metrics`` on ``repro.launch.kcore_run`` and ``kcore_serve``.
 """
 
-from repro.obs import metrics, trace
+from repro.obs import flight, health, http, metrics, trace
+from repro.obs.flight import FlightRecord, FlightRecorder, get_recorder
+from repro.obs.health import InvariantMonitor, get_monitor
+from repro.obs.http import ObsHTTPServer, start_server
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                get_registry)
 from repro.obs.trace import Span, Tracer, get_tracer
@@ -29,6 +43,9 @@ from repro.obs.validate import (TraceValidationError, span_tree_coverage,
 __all__ = [
     "trace",
     "metrics",
+    "flight",
+    "health",
+    "http",
     "Tracer",
     "Span",
     "get_tracer",
@@ -37,6 +54,13 @@ __all__ = [
     "Gauge",
     "Histogram",
     "get_registry",
+    "FlightRecorder",
+    "FlightRecord",
+    "get_recorder",
+    "InvariantMonitor",
+    "get_monitor",
+    "ObsHTTPServer",
+    "start_server",
     "validate_chrome_trace",
     "span_tree_coverage",
     "TraceValidationError",

@@ -41,10 +41,18 @@ def _prom_name(name: str) -> str:
     return name
 
 
+def _prom_label_value(value) -> str:
+    """Escape a label value per the exposition-format spec: backslash,
+    double-quote, and newline must be escaped inside the quotes."""
+    return (str(value).replace("\\", r"\\").replace('"', r"\"")
+            .replace("\n", r"\n"))
+
+
 def _prom_labels(labels: tuple) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{_prom_name(k)}="{v}"' for k, v in labels)
+    inner = ",".join(f'{_prom_name(k)}="{_prom_label_value(v)}"'
+                     for k, v in labels)
     return "{" + inner + "}"
 
 

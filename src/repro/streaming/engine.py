@@ -87,6 +87,7 @@ from repro.core.runtime import fused_converge_dense, fused_converge_sharded
 from repro.graph.padding import next_pow2 as _next_pow2
 from repro.graph.padding import round_up as _round_up
 from repro.graph.structs import Graph
+from repro.obs import flight as _flight
 from repro.obs import trace as _trace
 from repro.streaming.delta import ChurnDelta, DeltaResult, EdgeBatch, \
     PatchableCSR
@@ -788,6 +789,14 @@ class StreamingKCoreEngine:
         actives = [int(seed_changed.sum()), int(active.sum())]
 
         mode = self._resolve_mode(n, active)
+        # flight: one run per churn batch; round 0 = seed rebroadcast +
+        # link handshakes. No prev_est on round 0 — seed vs the old core
+        # legitimately moves both ways, only rounds >= 1 must be monotone.
+        rec = _flight.recorder()
+        if rec.active:
+            rec.start_run("streaming", mode, batch=self.batches_applied, n=n)
+            rec.record_round(actives[0], msgs[0], changed_counts[0],
+                             est=seed)
         est = seed
         rounds, converged = 0, False
         cap = (self.config.max_rounds if self.config.max_rounds is not None
@@ -815,6 +824,7 @@ class StreamingKCoreEngine:
             else:
                 step = self._make_step(mode, n, n_iters)
                 while rounds < cap and active.any():
+                    t_r = time.perf_counter() if rec.active else 0.0
                     with _trace.span("kcore.round", round=rounds):
                         new_est, ch, recv = step(est, active)
                         rounds += 1
@@ -823,6 +833,13 @@ class StreamingKCoreEngine:
                             break
                         msgs.append(int(deg64[ch].sum()))
                         changed_counts.append(int(ch.sum()))
+                        if rec.active:
+                            rec.record_round(
+                                actives[rounds], msgs[-1],
+                                changed_counts[-1],
+                                est=np.asarray(new_est),
+                                prev_est=np.asarray(est),
+                                host_s=time.perf_counter() - t_r)
                         active = recv
                         actives.append(int(active.sum()))
                         est = new_est
@@ -842,6 +859,9 @@ class StreamingKCoreEngine:
             self.core = core
             self.batches_applied += 1
             cap_slots = max(csr.capacity, 1)
+            if rec.active:
+                rec.end_run(converged=converged,
+                            messages=int(stats.total_messages))
             reconstruct_s = time.perf_counter() - t_rec
             return BatchResult(core=core, rounds=rounds, converged=converged,
                                stats=stats, delta=delta,

@@ -156,6 +156,15 @@ class KCoreServer:
         # one process — a pytest run, an A/B bench — must not merge their
         # latency distributions
         self.metrics = MetricsRegistry()
+        # pre-register every op so stats()/latency()/the scrape endpoint
+        # expose a STABLE schema: zero-request ops show count 0 / null
+        # quantiles instead of a missing key (dashboards key on op names)
+        for op in self.OPS:
+            self.metrics.counter("server_requests_total", op=op)
+            self.metrics.histogram("server_request_seconds", op=op)
+
+    OPS = ("core", "in_kcore", "members", "max_k", "core_asof", "update",
+           "advance_window")
 
     def _observe(self, op: str, wall_s: float) -> None:
         self.metrics.counter("server_requests_total", op=op).inc()

@@ -24,6 +24,8 @@ import numpy as np
 from repro.core.bz import bz_core_numbers
 from repro.core.kcore import KCoreConfig
 from repro.core.messages import heartbeat_overhead
+from repro.obs import flight as _flight
+from repro.obs import health as _health
 from repro.streaming.engine import StreamingConfig
 from repro.temporal.events import EventLog
 from repro.temporal.window import WindowedKCoreEngine, WindowStep
@@ -64,6 +66,9 @@ class ReplayRecord:
     core_max: int = 0
     core_mean: float = 0.0
     oracle_ok: bool | None = None   # None = not checked this step
+    # flight-recorder join (zeros/None when recording is disabled):
+    flight_rounds: int = 0          # rounds the recorder captured this step
+    health_ok: bool | None = None   # invariant-monitor verdict so far
 
 
 @dataclasses.dataclass
@@ -115,6 +120,9 @@ def record_step(ws: WindowStep, wall_s: float,
     actives = res.stats.active_per_round
     core = res.core
     hb = heartbeat_overhead(res.stats)
+    rec = _flight.recorder()
+    flight_rounds = rec.last_run_rounds if rec.active else 0
+    health_ok = _health.get_monitor().ok if rec.active else None
     return ReplayRecord(
         step=ws.step, lo=ws.lo, hi=ws.hi,
         t_lo=round(ws.t_lo, 6), t_hi=round(ws.t_hi, 6), m=ws.m,
@@ -136,6 +144,8 @@ def record_step(ws: WindowStep, wall_s: float,
         core_max=int(core.max()) if core.size else 0,
         core_mean=round(float(core.mean()), 4) if core.size else 0.0,
         oracle_ok=oracle_ok,
+        flight_rounds=flight_rounds,
+        health_ok=health_ok,
     )
 
 

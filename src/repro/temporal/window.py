@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.kcore import KCoreConfig
 from repro.graph.structs import Graph
+from repro.obs import flight as _flight
 from repro.obs import trace as _trace
 from repro.streaming.delta import EdgeBatch, edge_keys
 from repro.streaming.engine import (BatchResult, StreamingConfig,
@@ -198,6 +199,11 @@ class WindowedKCoreEngine:
         ``window.advance`` span: ``window.diff`` (the edge-set diff) plus
         the engine's ``batch`` tree."""
         with _trace.span("window.advance", step=self.steps_taken) as sp:
+            # label the streaming engine's upcoming flight run as a
+            # temporal window advance (consumed by its next start_run)
+            rec = _flight.recorder()
+            if rec.active:
+                rec.set_context(engine="temporal", step=self.steps_taken)
             with _trace.span("window.diff"):
                 batch, new_edges = self.peek_batch(k)
             if self.by == "count":

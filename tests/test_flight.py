@@ -1,0 +1,252 @@
+"""Flight recorder: cross-mode bit-equality, ring wraparound, watchlists.
+
+The load-bearing property (ISSUE 8): host-loop, fused, and sharded
+execution modes must produce IDENTICAL per-round (frontier, messages,
+changed) flight series on the same graph — the recorder reads the
+accounting arrays, and those are mode-invariant by the repo's bit-equality
+contract. BZ-verified so the series being compared describe exact cores.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import KCoreConfig, bz_core_numbers, kcore_decompose, kcore_decompose_sharded
+from repro.distribution.compat import make_mesh
+from repro.graph import generators as gen
+from repro.obs import flight
+from repro.obs.flight import NULL_RECORDER, FlightRecorder, drop_histogram
+from repro.streaming import StreamingConfig, StreamingKCoreEngine, random_churn_batch
+
+
+@pytest.fixture()
+def recorder():
+    """Enable the process recorder for one test, clean up after."""
+    flight.enable()
+    flight.reset()
+    yield flight.get_recorder()
+    flight.disable()
+    flight.reset()
+    flight.get_recorder()._timelines.clear()
+    flight.get_recorder()._watch = np.zeros(0, np.int64)
+
+
+def _series():
+    return [(r.round, r.frontier, r.messages, r.changed)
+            for r in flight.records()]
+
+
+# ---------------------------------------------------------------------- #
+# NULL recorder / disabled path
+# ---------------------------------------------------------------------- #
+
+def test_disabled_recorder_is_shared_noop():
+    flight.disable()
+    rec = flight.recorder()
+    assert rec is NULL_RECORDER
+    assert rec.active is False
+    # the full protocol is a no-op — nothing lands in the default ring
+    rec.set_context(engine="x")
+    assert rec.start_run("static", "host") == -1
+    rec.record_round(1, 2, 3)
+    rec.record_fused_rounds([1], [1], [1], frontier1=1)
+    rec.end_run()
+    assert flight.records() == []
+    assert flight.get_recorder().rounds_recorded == 0
+
+
+def test_null_recorder_has_no_per_instance_state():
+    assert not hasattr(NULL_RECORDER, "__dict__")  # __slots__ = ()
+
+
+def test_runs_decomposition_records_nothing_when_disabled():
+    flight.disable()
+    g = gen.barabasi_albert(100, 3, seed=0)
+    kcore_decompose(g)
+    kcore_decompose(g, fused=True)
+    assert flight.records() == []
+
+
+# ---------------------------------------------------------------------- #
+# Ring buffer
+# ---------------------------------------------------------------------- #
+
+def test_ring_wraparound_keeps_recent_and_monotone_seq():
+    rec = FlightRecorder(capacity=8)
+    rec.start_run("static", "host")
+    for i in range(20):
+        rec.record_round(frontier=100 - i, messages=10 * i, changed=i)
+    recs = rec.records()
+    assert len(recs) == 8                       # bounded
+    assert [r.seq for r in recs] == list(range(12, 20))   # survivors
+    assert [r.round for r in recs] == list(range(12, 20))
+    assert rec.rounds_recorded == 20
+    assert rec.to_json()["dropped"] == 12
+    assert rec.records(last=3) == recs[-3:]
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        FlightRecorder(capacity=0)
+
+
+# ---------------------------------------------------------------------- #
+# Cross-mode bit-equality (the tentpole property)
+# ---------------------------------------------------------------------- #
+
+def test_static_modes_produce_identical_flight_series(recorder):
+    g = gen.barabasi_albert(300, 3, seed=1)
+    ref = bz_core_numbers(g)
+
+    res = kcore_decompose(g, KCoreConfig())
+    assert (res.core == ref).all()
+    host = _series()
+    flight.reset()
+
+    res = kcore_decompose(g, KCoreConfig(), fused=True)
+    assert (res.core == ref).all()
+    fused = _series()
+    flight.reset()
+
+    mesh = make_mesh((1,), ("data",))
+    res = kcore_decompose_sharded(g, mesh, ("data",))
+    assert (res.core == ref).all()
+    sharded = _series()
+    flight.reset()
+
+    res = kcore_decompose_sharded(g, mesh, ("data",), fused=True)
+    assert (res.core == ref).all()
+    fused_sharded = _series()
+
+    assert len(host) > 2
+    assert host == fused == sharded == fused_sharded
+
+
+def test_flight_series_matches_accounting_arrays(recorder):
+    g = gen.erdos_renyi(200, 600, seed=3)
+    res = kcore_decompose(g)
+    recs = flight.records()
+    stats = res.stats
+    # one record per accounting round, same arrays
+    assert [r.messages for r in recs] == stats.messages_per_round.tolist()
+    assert [r.changed for r in recs] == stats.changed_per_round.tolist()
+    assert [r.frontier for r in recs] == stats.active_per_round.tolist()
+    assert [r.round for r in recs] == list(range(len(recs)))
+    # host loop attaches exact per-round drop histograms past round 0
+    for r in recs[1:]:
+        assert r.drop_hist is not None
+        assert sum(r.drop_hist) == r.changed
+        assert r.est_rises == 0
+
+
+def test_streaming_modes_produce_identical_flight_series(recorder):
+    g = gen.barabasi_albert(400, 3, seed=2)
+
+    def run(frontier):
+        flight.reset()
+        eng = StreamingKCoreEngine(g, StreamingConfig(frontier=frontier))
+        rng = np.random.default_rng(7)
+        for _ in range(3):
+            eng.apply_batch(random_churn_batch(eng.graph, 10, 10, rng))
+        assert (eng.core == bz_core_numbers(eng.graph)).all()
+        return [(r.engine, r.run, r.batch, r.round, r.frontier, r.messages,
+                 r.changed) for r in flight.records()]
+
+    dense = run("dense")
+    fused = run("fused")
+    assert len(dense) >= 3                     # at least round 0 per batch
+    assert dense == fused
+    # run 0 is the engine's bootstrap decomposition; every batch after it
+    # opened its own streaming run with the batch id attached
+    pairs = sorted({(r[1], r[2]) for r in dense if r[0] == "streaming"})
+    assert pairs == [(1, 0), (2, 1), (3, 2)]
+
+
+# ---------------------------------------------------------------------- #
+# Watchlist / per-vertex trajectories
+# ---------------------------------------------------------------------- #
+
+def test_watchlist_captures_monotone_trajectories(recorder):
+    g = gen.barabasi_albert(200, 3, seed=5)
+    flight.watch([0, 7, 150])
+    kcore_decompose(g)           # host loop: every round has host est
+    tl = flight.get_recorder().timelines()
+    assert set(tl) == {0, 7, 150}
+    for v, entries in tl.items():
+        assert len(entries) >= 2
+        ests = [e["est"] for e in entries]
+        # round 0 samples the degree seed; the series never rises
+        assert ests[0] == int(g.deg[v])
+        assert all(a >= b for a, b in zip(ests, ests[1:]))
+        assert [e["round"] for e in entries] == list(range(len(entries)))
+    # the timeline replays as a message timeline: changed flags mark sends
+    ch = [e["changed"] for e in tl[0]]
+    assert ch[0] is False
+
+
+def test_trajectory_accessor_and_out_of_range_ids(recorder):
+    rec = flight.get_recorder()
+    flight.watch([2, 999])
+    rec.start_run("static", "host")
+    rec.record_round(3, 3, 3, est=np.asarray([5, 5, 5]))
+    assert len(rec.trajectory(2)) == 1         # id 999 out of range: skipped
+    assert rec.trajectory(999) == []
+    assert rec.trajectory(123) == []
+
+
+# ---------------------------------------------------------------------- #
+# Histogram helper / fused reconstruction details
+# ---------------------------------------------------------------------- #
+
+def test_drop_histogram_buckets():
+    prev = np.asarray([10, 10, 10, 10, 10, 10, 3])
+    est = np.asarray([9, 8, 7, 4, 1, 10, 3])   # drops: 1, 2, 3, 6, 9
+    assert drop_histogram(prev, est) == (1, 1, 1, 1, 1)
+    assert drop_histogram(est, est) == (0, 0, 0, 0, 0)
+
+
+def test_fused_records_carry_amortized_device_wall_and_seed_drop(recorder):
+    g = gen.barabasi_albert(300, 3, seed=1)
+    res = kcore_decompose(g, fused=True)
+    recs = flight.records()
+    assert len(recs) == len(res.stats.messages_per_round)
+    # device wall amortized uniformly over rounds 1..k
+    devs = [r.device_s for r in recs[1:]]
+    assert all(d == pytest.approx(devs[0]) for d in devs)
+    # the aggregate seed-vs-final drop histogram rides the LAST round
+    last = recs[-1]
+    assert last.drop_hist is not None
+    dropped = int((res.core < g.deg).sum())
+    assert sum(last.drop_hist) == dropped
+    assert all(r.drop_hist is None for r in recs[1:-1])
+
+
+def test_set_context_labels_next_run(recorder):
+    rec = flight.get_recorder()
+    rec.set_context(engine="temporal", step=4)
+    rec.start_run("streaming", "fused", batch=0)
+    rec.record_round(1, 1, 1)
+    r = flight.records()[0]
+    assert r.engine == "temporal" and r.batch == 4
+    # context was consumed: the next run reverts to the caller's labels
+    rec.end_run()
+    rec.start_run("streaming", "fused", batch=1)
+    rec.record_round(1, 1, 1)
+    assert flight.records()[1].engine == "streaming"
+    assert flight.records()[1].batch == 1
+
+
+def test_dump_and_to_json_roundtrip(tmp_path, recorder):
+    g = gen.chain(50)
+    kcore_decompose(g)
+    path = str(tmp_path / "flight.json")
+    flight.dump(path)
+    import json
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["runs"] == 1
+    assert payload["rounds_recorded"] == len(payload["records"])
+    assert payload["records"][0]["engine"] == "static"
+    assert {"seq", "run", "round", "frontier", "messages",
+            "changed"} <= set(payload["records"][0])

@@ -1,0 +1,158 @@
+"""Invariant monitor: anomaly detection over the flight stream.
+
+The ISSUE 8 acceptance case lives here: an artificially injected
+non-monotone estimate MUST be flagged. The rest covers progress and
+mode-invariance checks, emission into the tracer/metrics registries, and
+the clean verdict on a real convergence.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import kcore_decompose
+from repro.graph import generators as gen
+from repro.obs import flight, trace
+from repro.obs.flight import FlightRecorder
+from repro.obs.health import InvariantMonitor
+from repro.obs.metrics import MetricsRegistry
+
+
+@pytest.fixture()
+def wired():
+    """A private recorder with a private-registry monitor attached."""
+    rec = FlightRecorder()
+    reg = MetricsRegistry()
+    mon = InvariantMonitor(registry=reg)
+    rec.add_observer(mon)
+    return rec, mon, reg
+
+
+def test_injected_non_monotone_estimate_is_flagged(wired):
+    rec, mon, reg = wired
+    rec.start_run("static", "host")
+    prev = np.asarray([5, 5, 5, 5])
+    rec.record_round(4, 10, 2, est=np.asarray([4, 4, 5, 5]), prev_est=prev)
+    assert mon.ok
+    # inject the violation: vertex 2's estimate RISES 5 -> 7
+    rec.record_round(4, 10, 1, est=np.asarray([4, 4, 7, 5]),
+                     prev_est=np.asarray([4, 4, 5, 5]))
+    assert not mon.ok
+    v = mon.verdict()
+    assert v["status"] == "anomalous"
+    assert v["kinds"]["non_monotone_estimate"] >= 1
+    assert v["last"]["kind"] == "non_monotone_estimate"
+    # gauge flipped, per-kind counter incremented
+    assert reg.gauge("obs_health_status").value == 0.0
+    c = reg.counter("obs_health_anomalies_total",
+                    kind="non_monotone_estimate")
+    assert c.value >= 1
+
+
+def test_est_sum_rise_without_vector_is_flagged(wired):
+    rec, mon, _ = wired
+    rec.start_run("static", "fused")
+    rec.record_round(4, 10, 2, est=np.asarray([3, 3, 3, 3]))
+    rec.record_round(3, 8, 1, est=np.asarray([3, 3, 3, 4]))  # sum rose
+    assert not mon.ok
+    assert mon.kinds.get("non_monotone_estimate", 0) >= 1
+
+
+def test_messages_without_change_is_flagged(wired):
+    rec, mon, _ = wired
+    rec.start_run("static", "host")
+    rec.record_round(10, 100, 0)          # round 0: exempt (broadcast)
+    assert mon.ok
+    rec.record_round(10, 100, 0)          # round 1: messages, no senders
+    assert not mon.ok
+    assert "messages_without_change" in mon.kinds
+
+
+def test_changed_exceeds_frontier_is_flagged(wired):
+    rec, mon, _ = wired
+    rec.start_run("static", "host")
+    rec.record_round(10, 100, 10)
+    rec.record_round(frontier=3, messages=50, changed=7)
+    assert "changed_exceeds_frontier" in mon.kinds
+
+
+def test_frontier_stall_emits_once(wired):
+    rec, mon, _ = wired
+    mon.stall_rounds = 5
+    rec.start_run("static", "host")
+    rec.record_round(10, 10, 10)
+    for _ in range(12):                   # frontier pinned: no new minimum
+        rec.record_round(8, 8, 4)
+    assert mon.kinds.get("frontier_stall") == 1
+
+
+def test_unconverged_run_is_flagged(wired):
+    rec, mon, _ = wired
+    rec.start_run("static", "host")
+    rec.record_round(10, 10, 10)
+    rec.end_run(converged=False)
+    assert "unconverged_run" in mon.kinds
+
+
+def test_observe_bill_mode_invariance(wired):
+    _, mon, _ = wired
+    mon.observe_bill(("EEN", 0), "dense", 1234)
+    mon.observe_bill(("EEN", 0), "sharded", 1234)
+    assert mon.ok
+    mon.observe_bill(("EEN", 1), "dense", 1000)
+    mon.observe_bill(("EEN", 1), "fused", 999)
+    assert not mon.ok
+    assert mon.kinds["mode_bill_mismatch"] == 1
+    assert mon.verdict()["last"]["other_total"] == 1000
+
+
+def test_anomalies_land_in_the_tracer(wired):
+    rec, mon, _ = wired
+    tracer = trace.get_tracer()
+    tracer.reset()
+    tracer.enable()
+    try:
+        rec.start_run("static", "host")
+        rec.record_round(10, 10, 10)
+        rec.record_round(3, 50, 7)        # changed > frontier
+        names = [e["name"] for e in tracer.events()]
+        assert "health.anomaly" in names
+        ev = next(e for e in tracer.events()
+                  if e["name"] == "health.anomaly")
+        assert ev["args"]["kind"] == "changed_exceeds_frontier"
+    finally:
+        tracer.disable()
+        tracer.reset()
+
+
+def test_real_decomposition_is_healthy():
+    flight.enable()
+    flight.reset()
+    rec = flight.get_recorder()
+    reg = MetricsRegistry()
+    mon = InvariantMonitor(registry=reg)
+    rec.add_observer(mon)
+    try:
+        g = gen.barabasi_albert(300, 3, seed=4)
+        kcore_decompose(g)                 # host loop
+        kcore_decompose(g, fused=True)     # fused reconstruction
+        assert mon.ok
+        v = mon.verdict()
+        assert v["status"] == "ok" and v["runs_seen"] == 2
+        assert reg.gauge("obs_health_status").value == 1.0
+    finally:
+        rec.remove_observer(mon)
+        flight.disable()
+        flight.reset()
+
+
+def test_monitor_reset_restores_ok(wired):
+    rec, mon, reg = wired
+    rec.start_run("static", "host")
+    rec.record_round(10, 10, 10)
+    rec.record_round(3, 50, 7)
+    assert not mon.ok
+    mon.reset()
+    assert mon.ok and mon.verdict()["status"] == "ok"
+    assert reg.gauge("obs_health_status").value == 1.0

@@ -191,6 +191,16 @@ def test_registry_json_and_prometheus_export():
     assert reg.to_json() == {}
 
 
+def test_prometheus_label_value_escaping():
+    # spec-conformant exposition: backslash, double-quote, and newline in
+    # label VALUES must be escaped (names are sanitized, values escaped)
+    reg = MetricsRegistry()
+    reg.counter("paths_total", path='C:\\tmp\\"x"\nend').inc()
+    prom = reg.to_prometheus()
+    assert 'paths_total{path="C:\\\\tmp\\\\\\"x\\"\\nend"} 1.0' in prom
+    assert "\n" not in prom.split('path="', 1)[1].split("} ")[0]
+
+
 def test_default_registry_module_functions():
     obs_metrics.reset()
     obs_metrics.counter("x").inc()
@@ -386,7 +396,9 @@ def test_server_latency_histograms_by_op():
     assert isinstance(stats["query_wall_s"], float)
     assert stats["query_wall_s"] > 0
     lat = stats["latency"]
-    assert set(lat) == {"core", "max_k", "update"}
+    # STABLE schema: every op is present, exercised or not (dashboards
+    # key on op names; zero-request ops show count 0 / null quantiles)
+    assert set(lat) == set(KCoreServer.OPS)
     for op in ("core", "max_k"):
         snap = lat[op]
         assert snap["count"] == 40
@@ -394,8 +406,14 @@ def test_server_latency_histograms_by_op():
         assert snap["min"] <= snap["mean"] <= snap["max"]
         assert snap["sum"] >= snap["count"] * snap["min"]
     assert lat["update"]["count"] == 1
-    # per-server registries: a second server starts clean
+    for op in ("members", "core_asof", "advance_window"):
+        assert lat[op]["count"] == 0
+        assert lat[op]["p50"] is None and lat[op]["min"] is None
+    # per-server registries: a second server starts clean but with the
+    # full op schema already registered
     srv2 = KCoreServer(gen.erdos_renyi(50, 100, seed=4))
-    assert srv2.stats()["latency"] == {}
+    lat2 = srv2.stats()["latency"]
+    assert set(lat2) == set(KCoreServer.OPS)
+    assert all(s["count"] == 0 for s in lat2.values())
     prom = srv.metrics.to_prometheus()
     assert 'server_request_seconds{op="core",quantile="0.99"}' in prom

@@ -1,0 +1,130 @@
+"""Live observability endpoint: /metrics, /healthz, /debug/flight.
+
+Spins a real ``ObsHTTPServer`` on an ephemeral port and scrapes it with
+urllib — the same path a Prometheus poller or the CI obs lane takes.
+"""
+
+from __future__ import annotations
+
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import kcore_decompose
+from repro.graph import generators as gen
+from repro.obs import flight, health, metrics
+from repro.obs.http import ObsHTTPServer, start_server
+from repro.obs.metrics import MetricsRegistry
+
+
+@pytest.fixture()
+def server():
+    srv = start_server(port=0)
+    yield srv
+    srv.stop()
+
+
+def _get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=5) as resp:
+            return resp.status, resp.headers.get("Content-Type"), resp.read()
+    except urllib.error.HTTPError as err:           # 4xx/5xx still carry a body
+        return err.code, err.headers.get("Content-Type"), err.read()
+
+
+def test_ephemeral_port_and_index(server):
+    assert server.port > 0
+    assert server.url == f"http://127.0.0.1:{server.port}"
+    code, ctype, body = _get(server.url + "/")
+    assert code == 200
+    assert b"/metrics" in body and b"/healthz" in body
+
+
+def test_metrics_endpoint_serves_prometheus_text(server):
+    metrics.counter("obs_http_test_total", probe="a").inc(3)
+    code, ctype, body = _get(server.url + "/metrics")
+    assert code == 200
+    assert ctype.startswith("text/plain")
+    assert "version=0.0.4" in ctype
+    text = body.decode()
+    assert '# TYPE obs_http_test_total counter' in text
+    assert 'obs_http_test_total{probe="a"} 3.0' in text
+
+
+def test_added_registry_is_rendered(server):
+    reg = MetricsRegistry()
+    reg.counter("side_registry_total", op="core").inc()
+    server.add_registry(reg)
+    server.add_registry(reg)                        # dedup: no double render
+    text = _get(server.url + "/metrics")[2].decode()
+    assert text.count('side_registry_total{op="core"} 1.0') == 1
+
+
+def test_healthz_ok_then_503_on_anomaly(server):
+    health.reset()
+    try:
+        code, ctype, body = _get(server.url + "/healthz")
+        assert code == 200 and ctype == "application/json"
+        v = json.loads(body)
+        assert v["status"] == "ok" and v["anomalies"] == 0
+
+        # feed the default monitor a rising estimate — the endpoint flips
+        rec = flight.FlightRecorder()
+        health.install(rec)
+        rec.start_run("static", "host")
+        rec.record_round(4, 10, 1, est=np.asarray([5, 9]),
+                         prev_est=np.asarray([5, 5]))
+        code, _, body = _get(server.url + "/healthz")
+        assert code == 503
+        v = json.loads(body)
+        assert v["status"] == "anomalous"
+        assert v["kinds"]["non_monotone_estimate"] >= 1
+    finally:
+        health.reset()
+
+
+def test_debug_flight_serves_recent_records(server):
+    flight.enable()
+    flight.reset()
+    try:
+        kcore_decompose(gen.barabasi_albert(150, 3, seed=6))
+        code, ctype, body = _get(server.url + "/debug/flight")
+        assert code == 200 and ctype == "application/json"
+        payload = json.loads(body)
+        assert payload["enabled"] is True
+        assert payload["runs"] == 1
+        assert payload["rounds_recorded"] == len(payload["records"]) > 2
+        rounds = [r["round"] for r in payload["records"]]
+        assert rounds == list(range(len(rounds)))
+
+        limited = json.loads(_get(server.url + "/debug/flight?n=2")[2])
+        assert len(limited["records"]) == 2
+        assert limited["records"] == payload["records"][-2:]
+    finally:
+        flight.disable()
+        flight.reset()
+
+
+def test_debug_flight_when_disabled(server):
+    flight.disable()
+    flight.reset()
+    payload = json.loads(_get(server.url + "/debug/flight")[2])
+    assert payload["enabled"] is False
+    assert payload["records"] == []
+
+
+def test_unknown_route_is_404(server):
+    code, _, _ = _get(server.url + "/nope")
+    assert code == 404
+
+
+def test_stop_closes_the_socket():
+    srv = ObsHTTPServer(port=0).start()
+    url = srv.url
+    assert _get(url + "/")[0] == 200
+    srv.stop()
+    with pytest.raises(Exception):
+        urllib.request.urlopen(url + "/", timeout=1)
