@@ -32,6 +32,7 @@ BENCHES = {
     "streaming": "benchmarks.streaming_maintenance",
     "temporal": "benchmarks.temporal_replay",
     "static": "benchmarks.static_decomposition",
+    "scale": "benchmarks.scale_decomposition",
 }
 
 

@@ -1,0 +1,203 @@
+"""Scale benchmark: the million-vertex Table I on bounded device memory.
+
+The paper's Table-I graphs top out in the millions of vertices; the
+in-memory modes materialize the full arc arrays on device, so the largest
+decomposable graph is capped by device memory. This benchmark runs the
+out-of-core block-cycling driver (``repro.core.outofcore``) over a SNAP
+analogue at 10^6-vertex scale under a FORCED byte budget and reports the
+memory story next to the convergence story:
+
+  * ``device_block_bytes`` — the arc bytes of ONE padded block, i.e. the
+    device-resident peak of the block-cycling driver;
+  * ``total_arc_bytes``    — the full arc arrays an in-memory mode would
+    have to materialize (``device_frac`` is the ratio: the headline claim
+    is device_frac << 1 at million-vertex scale);
+  * ``peak_rss_mb``        — host-side peak RSS (the O(n) vertex state plus
+    the LRU block cache, itself capped by ``mem_budget``);
+  * ``blocks_loaded`` / ``blocks_skipped`` / ``evictions`` — the I/O bill:
+    frontier-masked block skipping plus LRU cycling under the budget;
+  * ``imbalance``          — max/mean live arcs per block (straggler
+    factor of the uniform-V partition, satellite of balance_report).
+
+At verification scale (``n <= REPRO_SCALE_VERIFY_MAX``, or always when
+``REPRO_SCALE_VERIFY=1``) the run additionally asserts the out-of-core
+cores BZ-exact and the per-round message/active/changed bills bit-equal to
+the in-memory fused runtime — the same exactness lock the static gate
+holds, extended to the spill-to-disk tier.
+
+``python -m benchmarks.scale_decomposition`` writes ``BENCH_scale.json``
+(the committed artifact carries the 10^6-vertex headline run) and enforces
+``device_block_bytes < total_arc_bytes`` plus an optional eviction floor
+(CI's smoke lane forces a tiny budget and requires the cache actually
+cycled). Environment knobs:
+
+  REPRO_SCALE_GRAPH       Table-I abbrev for the analogue  (default LJ1)
+  REPRO_SCALE_VERTICES    comma-separated vertex targets   (default 1000000)
+  REPRO_SCALE_MEM_BUDGET  LRU cache budget in bytes        (default 64 MiB)
+  REPRO_SCALE_VERIFY      1 = always, 0 = never, auto = n <= VERIFY_MAX
+  REPRO_SCALE_VERIFY_MAX  auto-verify size cutoff          (default 200000)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import csv_row
+from repro.core.bz import bz_core_numbers
+from repro.core.kcore import kcore_decompose
+from repro.core.outofcore import outofcore_decompose
+from repro.graph import generators as gen
+
+GRAPH = os.environ.get("REPRO_SCALE_GRAPH", "LJ1")
+VERTICES = tuple(
+    int(v) for v in os.environ.get("REPRO_SCALE_VERTICES", "1000000").split(",")
+)
+MEM_BUDGET = int(os.environ.get("REPRO_SCALE_MEM_BUDGET", str(64 << 20)))
+VERIFY = os.environ.get("REPRO_SCALE_VERIFY", "auto")
+VERIFY_MAX = int(os.environ.get("REPRO_SCALE_VERIFY_MAX", "200000"))
+
+COLUMNS = (
+    "graph",
+    "vertices",
+    "edges",
+    "n_blocks",
+    "mem_budget",
+    "device_block_bytes",
+    "total_arc_bytes",
+    "device_frac",
+    "blocks_loaded",
+    "blocks_skipped",
+    "skip_rate",
+    "cache_hits",
+    "evictions",
+    "cache_peak_bytes",
+    "peak_rss_mb",
+    "imbalance",
+    "rounds",
+    "max_core",
+    "total_messages",
+    "ms_per_round",
+    "wall_s",
+    "verified",
+)
+
+
+def settings() -> dict:
+    return {
+        "graph": GRAPH,
+        "vertices": list(VERTICES),
+        "mem_budget": MEM_BUDGET,
+        "verify": VERIFY,
+    }
+
+
+def _should_verify(n: int) -> bool:
+    if VERIFY == "1":
+        return True
+    if VERIFY == "0":
+        return False
+    return n <= VERIFY_MAX
+
+
+def _verify(g, res) -> bool:
+    """BZ-exact cores AND bit-equal bills vs the in-memory fused runtime."""
+    fused = kcore_decompose(g, fused=True)
+    ok = bool(
+        (res.core == fused.core).all()
+        and (res.stats.messages_per_round == fused.stats.messages_per_round).all()
+        and (res.stats.active_per_round == fused.stats.active_per_round).all()
+        and (res.stats.changed_per_round == fused.stats.changed_per_round).all()
+        and res.rounds == fused.rounds
+        and (res.core == bz_core_numbers(g)).all()
+    )
+    assert ok, "out-of-core run diverged from the in-memory fused runtime"
+    return ok
+
+
+def run_records() -> list[dict]:
+    records = []
+    entry = gen.SNAP_BY_ABBREV[GRAPH]
+    for target in VERTICES:
+        g = gen.snap_analogue(GRAPH, scale=target / entry.n, seed=0)
+        t0 = time.perf_counter()
+        res = outofcore_decompose(g, mem_budget=MEM_BUDGET)
+        wall = time.perf_counter() - t0
+        bs = res.block_stats
+        assert bs is not None and res.converged
+        verified = _verify(g, res) if _should_verify(g.n) else False
+        records.append(
+            {
+                "graph": GRAPH,
+                "vertices": g.n,
+                "edges": g.m,
+                "n_blocks": bs.n_blocks,
+                "mem_budget": bs.mem_budget,
+                "device_block_bytes": bs.device_block_bytes,
+                "total_arc_bytes": bs.total_arc_bytes,
+                "device_frac": round(bs.device_block_bytes / max(bs.total_arc_bytes, 1), 4),
+                "blocks_loaded": bs.blocks_loaded,
+                "blocks_skipped": bs.blocks_skipped,
+                "skip_rate": round(bs.skip_rate, 4),
+                "cache_hits": bs.cache_hits,
+                "evictions": bs.evictions,
+                "cache_peak_bytes": bs.cache_peak_bytes,
+                "peak_rss_mb": round(bs.peak_rss_bytes / (1 << 20), 1),
+                "imbalance": round(bs.imbalance, 3),
+                "rounds": res.rounds,
+                "max_core": int(res.core.max()) if g.n else 0,
+                "total_messages": int(res.stats.total_messages),
+                "ms_per_round": round(bs.ms_per_round, 2),
+                "wall_s": round(wall, 2),
+                "verified": verified,
+            }
+        )
+    return records
+
+
+def run() -> list[str]:
+    records = run_records()
+    rows = [csv_row(*COLUMNS)]
+    rows.extend(csv_row(*(r[c] for c in COLUMNS)) for r in records)
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_scale.json")
+    ap.add_argument(
+        "--min-evictions",
+        type=int,
+        default=0,
+        metavar="N",
+        help="fail unless every run evicted at least N blocks (CI smoke "
+        "passes 1 with a tiny budget to prove the cache actually cycled)",
+    )
+    args = ap.parse_args()
+    records = run_records()
+    payload = {"settings": settings(), "records": records}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out} ({len(records)} records)")
+    for r in records:
+        print(
+            f"{r['graph']} n={r['vertices']} m={r['edges']}: "
+            f"device {r['device_block_bytes']:,}B of {r['total_arc_bytes']:,}B "
+            f"({r['device_frac']:.1%}), {r['rounds']} rounds @ "
+            f"{r['ms_per_round']}ms, evictions={r['evictions']} "
+            f"skip_rate={r['skip_rate']:.1%} verified={r['verified']}"
+        )
+        if r["device_block_bytes"] >= r["total_arc_bytes"]:
+            print("FAIL: device block bytes not below total arc bytes")
+            return 1
+        if r["evictions"] < args.min_evictions:
+            print(f"FAIL: {r['evictions']} evictions < floor {args.min_evictions}")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

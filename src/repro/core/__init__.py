@@ -17,6 +17,11 @@ from repro.core.kcore import (
 )
 from repro.core.cost_model import SeedCostModel, choose_seed, estimate_ub_passes
 from repro.core.messages import MessageStats, heartbeat_overhead, work_bound
+from repro.core.outofcore import (
+    OutOfCoreResult,
+    OutOfCoreStats,
+    outofcore_decompose,
+)
 from repro.core.runtime import (
     FusedOutcome,
     fused_converge_dense,
@@ -48,4 +53,7 @@ __all__ = [
     "MessageStats",
     "heartbeat_overhead",
     "work_bound",
+    "OutOfCoreResult",
+    "OutOfCoreStats",
+    "outofcore_decompose",
 ]

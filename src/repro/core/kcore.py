@@ -46,6 +46,7 @@ from repro.core import dispatch as _dispatch
 from repro.core.jit_telemetry import compile_count, compile_seconds
 from repro.core.messages import MessageStats
 from repro.obs import flight as _flight
+from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
 from repro.graph.partition import ShardedGraph
 from repro.graph.structs import EllGraph, Graph
@@ -741,12 +742,25 @@ def kcore_decompose_sharded(g: Graph, mesh: jax.sharding.Mesh,
     fused runtime, core/runtime.py): per-round cross-device traffic only,
     no host round-trips, accounting bit-equal to the host loop.
     """
+    from repro.distribution.compat import is_multiprocess_mesh
     from repro.graph.partition import shard_graph
+
+    if is_multiprocess_mesh(mesh) and not fused:
+        # the per-round host loop reads sharded device state every round
+        # with process-local conversions; only the fused runtime stages
+        # global arrays (runtime.fused_converge_sharded via compat)
+        raise ValueError("multi-process meshes require fused=True")
 
     compiles0, csecs0 = compile_count(), compile_seconds()
     phase_s: dict = {}
     n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
     sg = shard_graph(g, n_dev)
+    # straggler visibility: a round's wall is the slowest shard's, so skew
+    # should be observable BEFORE it costs wall-clock (same metric the
+    # out-of-core driver publishes per block store)
+    from repro.graph.partition import balance_report
+    _metrics.gauge("kcore_shard_imbalance").set(
+        balance_report(sg)["imbalance"])
     n_iters = _bs_iters(g.max_deg)
 
     deg64 = g.deg.astype(np.int64)

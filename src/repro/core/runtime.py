@@ -217,7 +217,21 @@ def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, ma
     for the static engine, ``shard_arc_arrays`` over live CSR slots for the
     streaming engine); ``seed``/``active`` are plain (n,) host vectors and
     are padded/reshaped to the shard layout here.
+
+    The mesh may span PROCESSES (``compat.init_multiprocess`` +
+    ``compat.global_mesh``): every rank calls this with the same graph and
+    the same host vectors (SPMD — the graph is cheap to hold per host, the
+    device arrays are what's sharded), inputs are staged as global arrays
+    through ``compat.stage_to_mesh``, and the sharded estimate output comes
+    back through ``compat.fetch_replicated``. The stat buffers are
+    replicated outputs, so their host reads stay process-local. Accounting
+    is bit-equal to every single-process mode either way (asserted rank-side
+    in tests/test_multihost.py).
     """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution import compat
+
     compiles0, csecs0 = compile_count(), compile_seconds()
     rec = flight.recorder()
     seed_np = None
@@ -225,9 +239,17 @@ def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, ma
         if frontier1 is None:
             frontier1 = int(np.asarray(active).sum())
         seed_np = np.asarray(seed, np.int64).copy()
-    with trace.span("fused-converge", n=n, max_rounds=max_rounds, mesh_devices=sg.n_shards) as span:
+    multiproc = compat.is_multiprocess_mesh(mesh)
+    axes = tuple(axis_names)
+    if multiproc:
+        def stage(a):
+            return compat.stage_to_mesh(np.asarray(a), mesh, P(axes))
+    else:
+        stage = jnp.asarray
+    with trace.span("fused-converge", n=n, max_rounds=max_rounds,
+                    mesh_devices=sg.n_shards, multiprocess=multiproc) as span:
         prog = _fused_sharded_convergence(
-            mesh, tuple(axis_names), sg.verts_per_shard, n_iters, max_rounds
+            mesh, axes, sg.verts_per_shard, n_iters, max_rounds
         )
         n_dev, V = sg.n_shards, sg.verts_per_shard
         est_p = np.zeros(sg.n_pad, np.int32)
@@ -237,12 +259,12 @@ def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, ma
         with trace.span("device-converge"):
             t0 = time.perf_counter()
             est_j, r, stop, final_act, mb, cb, rb = prog(
-                jnp.asarray(est_p.reshape(n_dev, V)),
-                jnp.asarray(sg.src),
-                jnp.asarray(sg.dst),
-                jnp.asarray(sg.arc_mask),
-                jnp.asarray(sg.deg),
-                jnp.asarray(act_p.reshape(n_dev, V)),
+                stage(est_p.reshape(n_dev, V)),
+                stage(sg.src),
+                stage(sg.dst),
+                stage(sg.arc_mask),
+                stage(sg.deg),
+                stage(act_p.reshape(n_dev, V)),
             )
             est_j = jax.block_until_ready(est_j)
             t_dev = time.perf_counter() - t0
@@ -254,7 +276,8 @@ def fused_converge_sharded(seed, active, sg, mesh, axis_names, *, n, n_iters, ma
                 t_dev,
                 compiles0,
                 csecs0,
-                lambda: np.asarray(est_j).reshape(-1)[:n].astype(np.int32),
+                lambda: compat.fetch_replicated(est_j, mesh)
+                .reshape(-1)[:n].astype(np.int32),
                 frontier1=frontier1,
                 seed=seed_np,
             )

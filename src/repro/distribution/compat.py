@@ -1,4 +1,4 @@
-"""jax version compatibility shims.
+"""jax version + topology compatibility shims.
 
 The repo pins jax 0.4.37 (the container's baked-in jax_pallas toolchain) but
 several distribution APIs moved across jax releases:
@@ -9,7 +9,16 @@ several distribution APIs moved across jax releases:
     and its replication-check kwarg renamed ``check_rep`` -> ``check_vma``.
 
 Everything in the repo that builds meshes or shard_maps goes through these
-two wrappers so the same code runs on the pinned 0.4.x and on newer jax.
+wrappers so the same code runs on the pinned 0.4.x and on newer jax.
+
+This module is ALSO the only place that touches ``jax.distributed``: the
+multi-process (multi-host) helpers below let the fused sharded runtime span
+processes — ``init_multiprocess`` brings a rank into the coordination
+service (with the CPU-collectives hint 0.4.x needs), ``global_mesh`` builds
+a mesh over every global device, and ``stage_to_mesh`` /
+``fetch_replicated`` move host arrays across the single-vs-multi-process
+boundary (``jnp.asarray`` and ``np.asarray`` are process-local and fail on
+cross-process global arrays).
 """
 
 from __future__ import annotations
@@ -17,6 +26,7 @@ from __future__ import annotations
 from typing import Sequence
 
 import jax
+import numpy as np
 
 
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]
@@ -37,3 +47,98 @@ def shard_map(f, mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=False)
+
+
+# ------------------------------------------------------------------ #
+# Multi-process (jax.distributed) topology
+# ------------------------------------------------------------------ #
+
+def _distributed_client():
+    """The live jax.distributed client, or None (API is private pre-0.5)."""
+    state = getattr(jax.distributed, "global_state", None)
+    if state is None:
+        try:
+            from jax._src.distributed import global_state as state
+        except ImportError:
+            return None
+    return getattr(state, "client", None)
+
+
+def cpu_collectives_hint() -> None:
+    """Select a CPU cross-process collectives backend where one is needed.
+
+    On the pinned 0.4.x the CPU backend refuses multi-process computations
+    unless ``jax_cpu_collectives_implementation`` is set (gloo ships in the
+    container's jaxlib); newer jax picks a default itself. Must run BEFORE
+    the backend initializes — ``init_multiprocess`` calls this first.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, ValueError):
+        pass  # option gone (newer jax defaults correctly) — nothing to do
+
+
+def init_multiprocess(coordinator_address: str, num_processes: int,
+                      process_id: int) -> None:
+    """Join this process into a ``jax.distributed`` service.
+
+    Every rank of a multi-host run calls this before touching any device;
+    afterwards ``jax.devices()`` is the GLOBAL device list and
+    ``global_mesh`` spans it. Idempotent per process (jax forbids double
+    initialization; a repeat call is a no-op). Deliberately avoids
+    ``jax.process_count()`` here — merely asking would initialize the
+    backend, after which jax refuses to join a coordination service.
+    """
+    if _distributed_client() is not None:
+        return
+    cpu_collectives_hint()
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def is_multiprocess() -> bool:
+    return jax.process_count() > 1
+
+
+def global_mesh(axis_name: str = "shard") -> jax.sharding.Mesh:
+    """1-D mesh over EVERY global device (all processes' devices)."""
+    return make_mesh((len(jax.devices()),), (axis_name,))
+
+
+def is_multiprocess_mesh(mesh: jax.sharding.Mesh) -> bool:
+    """True when ``mesh`` spans devices owned by more than one process."""
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
+def stage_to_mesh(arr: np.ndarray, mesh: jax.sharding.Mesh,
+                  spec) -> jax.Array:
+    """Build a global device array from a host copy every process holds.
+
+    ``jnp.asarray`` commits to a process-local device and cannot feed a
+    cross-process jit; ``jax.make_array_from_callback`` assembles the global
+    array from per-shard slices instead — each process serves only the
+    shards its own devices own. Works identically on a single-process mesh,
+    where it degenerates to a plain device_put with ``spec``.
+    """
+    arr = np.asarray(arr)
+    sharding = jax.sharding.NamedSharding(mesh, spec)
+    return jax.make_array_from_callback(arr.shape, sharding,
+                                        lambda idx: arr[idx])
+
+
+def fetch_replicated(x, mesh: jax.sharding.Mesh) -> np.ndarray:
+    """Host copy of a global array, valid on every process.
+
+    Non-fully-addressable arrays (outputs sharded across processes) are
+    first replicated with a collective identity jit — afterwards each
+    process holds the complete value and the numpy conversion is local.
+    """
+    if getattr(x, "is_fully_addressable", True):
+        return np.asarray(x)
+    from jax.sharding import PartitionSpec as P
+
+    rep = jax.jit(
+        lambda a: a,
+        out_shardings=jax.sharding.NamedSharding(mesh, P()))(x)
+    return np.asarray(rep.addressable_data(0))

@@ -2,6 +2,7 @@
 neighbor sampling, and IO following the paper's dataCleanse rules."""
 
 from repro.graph.structs import Graph, EllGraph, build_ell, pad_graph_for_shards
+from repro.graph.blockstore import Block, BlockCache, BlockStore, plan_blocks
 from repro.graph import generators, io, partition, sampler
 
 __all__ = [
@@ -9,6 +10,10 @@ __all__ = [
     "EllGraph",
     "build_ell",
     "pad_graph_for_shards",
+    "Block",
+    "BlockCache",
+    "BlockStore",
+    "plan_blocks",
     "generators",
     "io",
     "partition",

@@ -46,6 +46,34 @@ class ShardedGraph:
         return self.n_shards * self.verts_per_shard
 
 
+def shard_layout(n: int, src: np.ndarray, n_shards: int,
+                 arc_multiple: int = 8, pow2: bool = False,
+                 min_arcs_per_shard: int = 0) -> tuple[int, int, np.ndarray]:
+    """The shared block geometry of the layout contract above.
+
+    Returns ``(V, A, bounds)``: per-shard (padded) vertex count V, per-shard
+    (padded) arc-block length A, and the ``(n_shards + 1,)`` arc-run bounds
+    into the src-sorted arc arrays (shard d owns arcs
+    ``[bounds[d], bounds[d+1])``). Shared by the in-memory partitioner
+    (``shard_arc_arrays``) and the out-of-core block store
+    (``repro.graph.blockstore``) so a spilled block is bit-identical to the
+    shard the mesh engines would have staged.
+    """
+    V = max(_round_up(n, n_shards) // n_shards, 1)
+    if pow2:
+        V = _next_pow2(V)
+    n_pad = V * n_shards
+    # Arc run per shard.
+    bounds = np.searchsorted(src, np.arange(0, n_pad + 1, V))
+    run_len = np.diff(bounds)
+    A = max(_round_up(int(run_len.max()) if len(run_len) else 1, arc_multiple),
+            arc_multiple)
+    if pow2:
+        A = _next_pow2(A)
+    A = max(A, int(min_arcs_per_shard))
+    return V, A, bounds
+
+
 def shard_arc_arrays(n: int, src: np.ndarray, dst: np.ndarray,
                      arc_mask: np.ndarray, deg: np.ndarray, n_shards: int,
                      arc_multiple: int = 8, pow2: bool = False,
@@ -61,18 +89,10 @@ def shard_arc_arrays(n: int, src: np.ndarray, dst: np.ndarray,
     engine passes its high-water A so per-batch degree fluctuations never
     shrink the shape (shrinking would mint fresh jit signatures).
     """
-    V = max(_round_up(n, n_shards) // n_shards, 1)
-    if pow2:
-        V = _next_pow2(V)
+    V, A, bounds = shard_layout(n, src, n_shards, arc_multiple=arc_multiple,
+                                pow2=pow2,
+                                min_arcs_per_shard=min_arcs_per_shard)
     n_pad = V * n_shards
-    # Arc run per shard.
-    bounds = np.searchsorted(src, np.arange(0, n_pad + 1, V))
-    run_len = np.diff(bounds)
-    A = max(_round_up(int(run_len.max()) if len(run_len) else 1, arc_multiple),
-            arc_multiple)
-    if pow2:
-        A = _next_pow2(A)
-    A = max(A, int(min_arcs_per_shard))
     src_s = np.zeros((n_shards, A), np.int32)
     dst_s = np.zeros((n_shards, A), np.int32)
     mask_s = np.zeros((n_shards, A), bool)
@@ -106,13 +126,26 @@ def shard_graph(g: Graph, n_shards: int, arc_multiple: int = 8) -> ShardedGraph:
                             arc_multiple=arc_multiple)
 
 
-def balance_report(sg: ShardedGraph) -> dict:
-    """Arc-count balance across shards (straggler diagnosis)."""
-    real = sg.arc_mask.sum(axis=1)
+def balance_from_counts(real: np.ndarray, padded_A: int) -> dict:
+    """Arc-count balance metrics from per-shard live-arc counts.
+
+    ``imbalance`` = max/mean — the straggler factor: a round's wall is the
+    slowest shard's, so this is the multiplier block skew costs before it
+    shows up in wall-clock. Shared by ``balance_report`` (in-memory shards)
+    and the out-of-core block store.
+    """
+    real = np.asarray(real, np.int64)
+    if real.size == 0:
+        real = np.zeros(1, np.int64)
     return {
         "arcs_per_shard_max": int(real.max()),
         "arcs_per_shard_min": int(real.min()),
         "arcs_per_shard_mean": float(real.mean()),
         "imbalance": float(real.max() / max(real.mean(), 1e-9)),
-        "padded_A": sg.arcs_per_shard,
+        "padded_A": int(padded_A),
     }
+
+
+def balance_report(sg: ShardedGraph) -> dict:
+    """Arc-count balance across shards (straggler diagnosis)."""
+    return balance_from_counts(sg.arc_mask.sum(axis=1), sg.arcs_per_shard)

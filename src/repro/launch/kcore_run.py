@@ -6,6 +6,8 @@
     PYTHONPATH=src python -m repro.launch.kcore_run --graph FC --fused
     PYTHONPATH=src python -m repro.launch.kcore_run --graph ba --mesh 4 --fused
     PYTHONPATH=src python -m repro.launch.kcore_run --graph ba --fused --dispatch on
+    PYTHONPATH=src python -m repro.launch.kcore_run --graph LJ1 --scale 0.01 \
+        --out-of-core --mem-budget $((4 << 20))
 
 Prints the paper's measurement set: total messages, messages/active nodes
 per round, rounds to convergence, work bound, heartbeat-model overhead, and
@@ -41,6 +43,29 @@ def parse_args() -> argparse.Namespace:
         action="store_true",
         help="run the round loop as one device-resident while_loop "
         "(jacobi only; accounting bit-equal to the host loop)",
+    )
+    ap.add_argument(
+        "--out-of-core",
+        action="store_true",
+        help="block-cycling decomposition on bounded device memory "
+        "(repro.core.outofcore): arc blocks spill to disk and cycle "
+        "through an LRU cache; bills bit-equal to the in-memory modes",
+    )
+    ap.add_argument(
+        "--mem-budget",
+        type=int,
+        default=None,
+        metavar="BYTES",
+        help="out-of-core LRU block-cache budget in bytes (drives the "
+        "block-count plan; default: 8 blocks, unbounded cache)",
+    )
+    ap.add_argument(
+        "--blocks",
+        type=int,
+        default=None,
+        metavar="N",
+        help="force the out-of-core block count instead of planning it "
+        "from --mem-budget",
     )
     ap.add_argument(
         "--mesh",
@@ -116,6 +141,12 @@ def parse_args() -> argparse.Namespace:
         # the sharded engine is jacobi/segment only; refuse rather than
         # silently running (and reporting) a different mode than asked
         ap.error("--mesh supports --mode jacobi --backend segment only")
+    if args.out_of_core and (args.mesh or args.fused or args.mode != "jacobi"
+                             or args.backend != "segment"):
+        ap.error("--out-of-core is its own engine: jacobi/segment only, "
+                 "no --mesh/--fused")
+    if (args.mem_budget or args.blocks) and not args.out_of_core:
+        ap.error("--mem-budget/--blocks require --out-of-core")
     return args
 
 
@@ -171,7 +202,12 @@ def main() -> None:
 
     g = build_graph(args, generators)
     t0 = time.perf_counter()
-    if args.mesh:
+    if args.out_of_core:
+        from repro.core.outofcore import outofcore_decompose
+
+        res = outofcore_decompose(g, mem_budget=args.mem_budget,
+                                  n_blocks=args.blocks)
+    elif args.mesh:
         from repro.distribution.compat import make_mesh
 
         mesh = make_mesh((args.mesh,), ("data",))
@@ -215,6 +251,8 @@ def main() -> None:
             for m in (INTERNET, DATACENTER, TPU_POD)
         },
     }
+    if args.out_of_core and res.block_stats is not None:
+        report["out_of_core"] = res.block_stats.to_json()
     if args.json:
         print(json.dumps(report, indent=1))
     else:

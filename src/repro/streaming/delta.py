@@ -343,6 +343,52 @@ class PatchableCSR:
                           compacted=compacted)
 
     # ------------------------------------------------------------------ #
+    def state_dict(self) -> dict:
+        """Checkpointable array pytree of the full slot state.
+
+        Everything mutable is captured (slot arrays, degrees, hole/dead
+        fragmentation bookkeeping, compaction count) so a restored CSR is
+        bit-identical — same capacities, same slot order, same compaction
+        trigger point — not merely the same graph.
+        """
+        return {
+            "row_off": self.row_off,
+            "src": self.src,
+            "dst": self.dst,
+            "live": self.live,
+            "hole": self.hole,
+            "deg": self.deg,
+            "dead": np.asarray(self.dead, np.int64),
+            "compactions": np.asarray(self.compactions, np.int64),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict, *, slack: float = 0.3,
+                   min_slack: int = 4,
+                   compact_dead_frac: float = 0.25) -> "PatchableCSR":
+        """Rebuild from ``state_dict`` output without touching a Graph.
+
+        The churn knobs are config, not state — pass the engine's (they
+        only affect FUTURE compactions).
+        """
+        csr = cls.__new__(cls)
+        csr.slack = float(slack)
+        csr.min_slack = max(int(min_slack), 1)
+        csr.compact_dead_frac = float(compact_dead_frac)
+        # own, writable copies: the CSR mutates these in place, and restored
+        # checkpoint leaves can arrive as read-only (mmap/device) buffers
+        csr.row_off = np.array(state["row_off"], np.int64)
+        csr.n = int(csr.row_off.shape[0]) - 1
+        csr.src = np.array(state["src"], np.int32)
+        csr.dst = np.array(state["dst"], np.int32)
+        csr.live = np.array(state["live"], bool)
+        csr.hole = np.array(state["hole"], bool)
+        csr.deg = np.array(state["deg"], np.int32)
+        csr.m = int(csr.deg.sum()) // 2
+        csr.dead = int(state["dead"])
+        csr.compactions = int(state["compactions"])
+        return csr
+
     def to_graph(self) -> Graph:
         """Materialize the exact immutable Graph (sorted COO) — O(m log m).
 

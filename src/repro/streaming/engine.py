@@ -560,6 +560,60 @@ class StreamingKCoreEngine:
         return self._slots_cache
 
     # ------------------------------------------------------------------ #
+    def state_dict(self) -> dict:
+        """Checkpointable pytree of the engine's exact state.
+
+        Cores plus the full PatchableCSR slot state (``delta.PatchableCSR
+        .state_dict``) — everything a warm restart needs to continue the
+        stream without re-running the initial decomposition. Feed straight
+        to ``repro.checkpoint.save_checkpoint``; rebuild with
+        ``StreamingKCoreEngine.from_state_dict``.
+        """
+        return {
+            "core": np.asarray(self.core, np.int32),
+            "batches_applied": np.asarray(self.batches_applied, np.int64),
+            "csr": self._csr.state_dict(),
+        }
+
+    @classmethod
+    def from_state_dict(cls, state: dict,
+                        config: StreamingConfig = StreamingConfig(),
+                        mesh=None, axis_names=("data",)
+                        ) -> "StreamingKCoreEngine":
+        """Warm-restart an engine from ``state_dict`` output.
+
+        No decomposition runs: the restored cores ARE the fixpoint of the
+        restored CSR (the pair was captured atomically), so the engine
+        resumes exactly where the checkpointed one stopped. Restored
+        leaves may be jnp arrays (``repro.checkpoint`` restores onto
+        device) — everything is normalized back to host numpy here.
+        """
+        if config.frontier not in FRONTIER_MODES:
+            raise ValueError(f"unknown frontier mode {config.frontier!r}")
+        if config.frontier == "sharded" and mesh is None:
+            from repro.distribution.compat import make_mesh
+            mesh = make_mesh((jax.device_count(),), ("data",))
+            axis_names = ("data",)
+        eng = cls.__new__(cls)
+        eng.config = config
+        eng.mesh = mesh
+        eng.axis_names = tuple(axis_names)
+        eng._csr = PatchableCSR.from_state(
+            {k: np.asarray(v) for k, v in state["csr"].items()},
+            slack=config.slack, min_slack=config.min_slack,
+            compact_dead_frac=config.compact_dead_frac)
+        eng._graph_cache = None
+        eng._slots_cache = None
+        eng._live_cache = None
+        eng._arc_pad_hwm = _next_pow2(max(int(config.min_arc_capacity), 1))
+        eng._shard_A_floor = 0
+        eng._n_iters_hwm = 0
+        eng.core = np.asarray(state["core"], np.int32)
+        eng.init_result = None
+        eng.batches_applied = int(np.asarray(state["batches_applied"]))
+        return eng
+
+    # ------------------------------------------------------------------ #
     def _resolve_mode(self, n: int, active: np.ndarray) -> str:
         """Config frontier -> the execution mode this batch runs in.
 

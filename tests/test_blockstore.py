@@ -1,0 +1,167 @@
+"""Spill-to-disk block store: layout parity with shard_arc_arrays, mmap
+round-trips, LRU budget semantics, and block-count planning."""
+
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.graph.blockstore import (ARC_SLOT_BYTES, BlockCache, BlockStore,
+                                    plan_blocks)
+from repro.graph.partition import shard_arc_arrays, shard_layout
+
+
+@pytest.mark.parametrize("n_blocks", [1, 2, 4, 8])
+def test_block_rows_match_shard_arc_arrays(tmp_path, n_blocks):
+    """A materialized block must be bit-identical to the shard the mesh
+    engines would have staged — same local src, global dst, mask, padding
+    sentinels included."""
+    g = gen.barabasi_albert(123, 3, seed=5)
+    sg = shard_arc_arrays(g.n, g.src, g.dst, np.ones(g.num_arcs, bool),
+                          g.deg, n_blocks)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=n_blocks)
+    assert store.V == sg.verts_per_shard
+    assert store.A == sg.arcs_per_shard
+    for b in range(n_blocks):
+        blk = store.block(b)
+        np.testing.assert_array_equal(blk.src, sg.src[b])
+        np.testing.assert_array_equal(blk.dst, sg.dst[b])
+        np.testing.assert_array_equal(blk.mask, sg.arc_mask[b])
+
+
+def test_open_round_trip(tmp_path):
+    g = gen.erdos_renyi(n=200, m=800, seed=1)
+    created = BlockStore.create(tmp_path / "s", g, n_blocks=4)
+    reopened = BlockStore.open(tmp_path / "s")
+    assert (reopened.n, reopened.V, reopened.A) == \
+        (created.n, created.V, created.A)
+    for b in range(4):
+        np.testing.assert_array_equal(reopened.block(b).dst,
+                                      created.block(b).dst)
+    # raw access is real-length (unpadded) and mmap-backed
+    raw_src, _, raw_mask = reopened.block_raw(0)
+    assert raw_src.shape[0] == reopened.arcs_per_block[0]
+    assert isinstance(raw_src, np.memmap)
+    assert raw_mask.dtype == bool
+
+
+def test_create_overwrite_guard(tmp_path):
+    g = gen.star(10)
+    BlockStore.create(tmp_path / "s", g, n_blocks=2)
+    with pytest.raises(FileExistsError):
+        BlockStore.create(tmp_path / "s", g, n_blocks=2)
+    BlockStore.create(tmp_path / "s", g, n_blocks=2, overwrite=True)
+
+
+def test_open_rejects_unknown_version(tmp_path):
+    g = gen.star(10)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=2)
+    manifest = (store.path / "manifest.json")
+    manifest.write_text(manifest.read_text().replace('"version": 1',
+                                                     '"version": 99'))
+    with pytest.raises(ValueError, match="version"):
+        BlockStore.open(tmp_path / "s")
+
+
+def test_byte_accounting(tmp_path):
+    g = gen.barabasi_albert(100, 2, seed=0)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=4)
+    assert store.total_arc_bytes == g.num_arcs * ARC_SLOT_BYTES
+    assert store.block_arc_bytes == store.A * ARC_SLOT_BYTES
+    blk = store.block(0)
+    assert blk.nbytes == store.block_arc_bytes
+    assert int(store.live_per_block.sum()) == g.num_arcs
+
+
+def test_balance_matches_partition_report(tmp_path):
+    from repro.graph.partition import balance_report, shard_graph
+    g = gen.barabasi_albert(150, 3, seed=2)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=4)
+    assert store.balance() == balance_report(shard_graph(g, 4))
+
+
+def test_lru_eviction_and_budget(tmp_path):
+    g = gen.barabasi_albert(200, 3, seed=3)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=8)
+    # budget for exactly two resident blocks
+    cache = BlockCache(store, budget_bytes=2 * store.block_arc_bytes)
+    assert not cache.over_budget
+    for b in range(8):
+        cache.get(b)
+    assert cache.loads == 8
+    assert cache.evictions == 6
+    assert cache.bytes <= cache.budget_bytes
+    assert cache.peak_bytes <= cache.budget_bytes + store.block_arc_bytes
+    # blocks 6, 7 are resident → hits; block 0 was evicted → reload
+    cache.get(7)
+    cache.get(6)
+    assert cache.hits == 2
+    cache.get(0)
+    assert cache.loads == 9
+    s = cache.stats()
+    assert s["resident_blocks"] == 2
+    assert s["evictions"] == 7
+
+
+def test_lru_recency_order(tmp_path):
+    g = gen.barabasi_albert(200, 3, seed=4)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=4)
+    cache = BlockCache(store, budget_bytes=2 * store.block_arc_bytes)
+    cache.get(0)
+    cache.get(1)
+    cache.get(0)          # touch 0 → 1 is now LRU
+    cache.get(2)          # evicts 1, not 0
+    assert cache.hits == 1
+    cache.get(0)
+    assert cache.hits == 2
+
+
+def test_cache_retains_block_over_impossible_budget(tmp_path):
+    g = gen.barabasi_albert(100, 3, seed=5)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=2)
+    cache = BlockCache(store, budget_bytes=1)  # less than one block
+    assert cache.over_budget
+    blk = cache.get(0)  # still served: can't compute on less than a block
+    assert blk.bid == 0
+    assert cache.stats()["resident_blocks"] == 1
+
+
+def test_unbounded_cache_never_evicts(tmp_path):
+    g = gen.barabasi_albert(100, 3, seed=6)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=8)
+    cache = BlockCache(store, budget_bytes=None)
+    for b in range(8):
+        cache.get(b)
+    assert cache.evictions == 0
+    assert cache.stats()["resident_blocks"] == 8
+
+
+def test_plan_blocks_fits_budget():
+    g = gen.barabasi_albert(2000, 4, seed=7)
+    budget = 64 * 1024
+    nb = plan_blocks(g.n, g.src, budget)
+    _V, A, _ = shard_layout(g.n, g.src, nb)
+    assert 2 * A * ARC_SLOT_BYTES <= budget
+    # generous budget → one block suffices
+    assert plan_blocks(g.n, g.src, 10**9) == 1
+    assert plan_blocks(g.n, g.src, None) == 8
+
+
+def test_plan_blocks_caps_out():
+    g = gen.star(50)
+    # absurd budget: planner caps at max_blocks instead of looping forever
+    nb = plan_blocks(g.n, g.src, 1, max_blocks=64)
+    assert nb <= 64
+
+
+def test_create_from_raw_arrays_with_dead_slots(tmp_path):
+    """Masked (dead) arcs persist through the store — the streaming CSR's
+    slack slots must not resurrect."""
+    src = np.array([0, 0, 1, 2, 2, 3], np.int32)
+    dst = np.array([1, 2, 0, 0, 3, 2], np.int32)
+    mask = np.array([True, True, True, True, False, False])
+    store = BlockStore.create(tmp_path / "s", n=4, src=src, dst=dst,
+                              arc_mask=mask, n_blocks=2)
+    got = np.concatenate([store.block(b).mask[store.block(b).src >= 0]
+                          for b in range(2)])
+    assert int(store.live_per_block.sum()) == 4
+    assert got.sum() == 4

@@ -1,0 +1,83 @@
+"""Checkpoint <-> streaming engine round trip: the seed's repro/checkpoint
+module persists engine state (cores + PatchableCSR slot arrays) and a
+restored engine continues the churn stream exactly — groundwork for
+warm restarts (ROADMAP item 4)."""
+
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.bz import bz_core_numbers
+from repro.graph import generators as gen
+from repro.streaming import (StreamingConfig, StreamingKCoreEngine,
+                             random_churn_batch)
+from repro.streaming.delta import PatchableCSR
+
+
+def test_csr_state_round_trip():
+    """PatchableCSR.state_dict -> from_state is bit-identical storage."""
+    g = gen.barabasi_albert(150, 3, seed=0)
+    csr = PatchableCSR(g, slack=0.5, min_slack=2)
+    restored = PatchableCSR.from_state(csr.state_dict(), slack=0.5,
+                                       min_slack=2)
+    assert restored.n == csr.n and restored.m == csr.m
+    for f in ("row_off", "src", "dst", "live", "hole", "deg"):
+        np.testing.assert_array_equal(getattr(restored, f), getattr(csr, f))
+    assert restored.dead == csr.dead
+    assert restored.compactions == csr.compactions
+    g2 = restored.to_graph()
+    np.testing.assert_array_equal(g2.src, csr.to_graph().src)
+
+
+def test_engine_checkpoint_round_trip(tmp_path):
+    """Checkpoint mid-stream, restore, and both engines must agree batch by
+    batch — same cores (BZ-exact), same CSR slots, no re-decomposition."""
+    rng = np.random.default_rng(1)
+    g = gen.barabasi_albert(200, 3, seed=1)
+    eng = StreamingKCoreEngine(g, StreamingConfig(frontier="fused"))
+    for _ in range(3):
+        eng.apply_batch(random_churn_batch(eng.graph, 8, 8, rng))
+
+    save_checkpoint(tmp_path, eng.batches_applied, eng.state_dict())
+
+    like = eng.state_dict()
+    restored_state, step = restore_checkpoint(tmp_path, like)
+    assert step == 3
+    eng2 = StreamingKCoreEngine.from_state_dict(
+        restored_state, StreamingConfig(frontier="fused"))
+    assert eng2.init_result is None  # warm restart: no decomposition ran
+    assert eng2.batches_applied == eng.batches_applied
+    np.testing.assert_array_equal(eng2.core, eng.core)
+    for f in ("row_off", "src", "dst", "live", "hole", "deg"):
+        np.testing.assert_array_equal(getattr(eng2.csr, f),
+                                      getattr(eng.csr, f))
+
+    # the restored engine continues the stream in lockstep with the
+    # original — identical cores AND identical message bills per batch
+    rng_a, rng_b = (np.random.default_rng(7), np.random.default_rng(7))
+    for _ in range(3):
+        ba = random_churn_batch(eng.graph, 6, 6, rng_a)
+        bb = random_churn_batch(eng2.graph, 6, 6, rng_b)
+        ra = eng.apply_batch(ba)
+        rb = eng2.apply_batch(bb)
+        np.testing.assert_array_equal(eng.core, eng2.core)
+        np.testing.assert_array_equal(ra.stats.messages_per_round,
+                                      rb.stats.messages_per_round)
+        np.testing.assert_array_equal(eng2.core,
+                                      bz_core_numbers(eng2.graph))
+
+
+def test_restore_across_frontier_modes(tmp_path):
+    """A checkpoint is mode-agnostic: state captured under one frontier
+    restores under another (all modes are exact-equal)."""
+    g = gen.erdos_renyi(n=150, m=600, seed=2)
+    eng = StreamingKCoreEngine(g, StreamingConfig(frontier="dense"))
+    rng = np.random.default_rng(3)
+    eng.apply_batch(random_churn_batch(eng.graph, 5, 5, rng))
+    save_checkpoint(tmp_path, eng.batches_applied, eng.state_dict())
+    state, _ = restore_checkpoint(tmp_path, eng.state_dict())
+    eng2 = StreamingKCoreEngine.from_state_dict(
+        state, StreamingConfig(frontier="compact"))
+    np.testing.assert_array_equal(eng2.core, eng.core)
+    eng2.apply_batch(random_churn_batch(eng2.graph, 5, 5,
+                                        np.random.default_rng(4)))
+    np.testing.assert_array_equal(eng2.core, bz_core_numbers(eng2.graph))

@@ -44,3 +44,51 @@ def test_json_adjacency_one_sided_lists():
 def test_edge_list_comments_and_separators():
     g = parse_edge_list("# header\n0 1\n1,2\n% alt comment\n2\t0\n")
     assert g.n == 3 and g.m == 3
+
+
+def test_parse_edge_list_ragged_columns():
+    """Mixed column counts (e.g. a temporal u v t row) keep columns 0-1."""
+    g = parse_edge_list("0 1 999\n1 2\n2 0 7 8\n")
+    assert g.n == 3 and g.m == 3
+
+
+def test_load_edge_list_streams_chunks(tmp_path):
+    """Chunked loading is bit-identical to the slurped parse, even with a
+    chunk size small enough to split the file many times."""
+    import numpy as np
+
+    from repro.graph.io import iter_edge_chunks, load_edge_list
+
+    rng = np.random.default_rng(0)
+    e = rng.integers(0, 500, size=(3000, 2))
+    lines = ["# snap header", "% alt comment"]
+    lines += [f"{u}\t{v}" for u, v in e]
+    p = tmp_path / "edges.txt"
+    p.write_text("\n".join(lines) + "\n")
+
+    ref = parse_edge_list(p.read_text())
+    for chunk_bytes in (1 << 24, 4096, 64):
+        g = load_edge_list(str(p), chunk_bytes=chunk_bytes)
+        assert g.n == ref.n and g.m == ref.m
+        assert (g.src == ref.src).all() and (g.dst == ref.dst).all()
+    # every chunk is a well-formed (k, 2) block and they cover the file
+    total = sum(len(c) for c in iter_edge_chunks(str(p), 4096))
+    assert total == len(e)
+
+
+def test_load_edge_list_uniform_three_columns(tmp_path):
+    """A uniformly 3-column (temporal SNAP) file takes the vectorized fast
+    path and still keeps only (src, dst)."""
+    p = tmp_path / "t.txt"
+    p.write_text("0 1 100\n1 2 101\n2 0 102\n")
+    from repro.graph.io import load_edge_list
+    g = load_edge_list(str(p))
+    assert g.n == 3 and g.m == 3
+
+
+def test_load_edge_list_empty_and_comments_only(tmp_path):
+    from repro.graph.io import load_edge_list
+    p = tmp_path / "empty.txt"
+    p.write_text("# nothing here\n%\n\n")
+    g = load_edge_list(str(p))
+    assert g.n == 0 and g.m == 0

@@ -1,0 +1,112 @@
+"""Multi-process (jax.distributed) mesh: the fused sharded runtime spans
+processes through distribution/compat — two coordinated ranks, each with two
+forced host devices, decompose on the 4-device GLOBAL mesh and must match
+the single-process host loop and the BZ oracle bit for bit.
+
+Subprocess-driven like tests/test_distributed.py: each rank is its own
+interpreter (its own jax runtime), rendezvousing on a localhost coordinator
+port. Skips where the CPU backend has no cross-process collectives.
+"""
+
+import json
+import socket
+import subprocess
+import sys
+
+import pytest
+
+_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+        # keep jax off accelerator probing (the TPU plugin's GCP metadata
+        # retries burn minutes in a hermetic env)
+        "JAX_PLATFORMS": "cpu"}
+
+_RANK_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import numpy as np
+from repro.distribution import compat
+
+rank, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+compat.init_multiprocess(f"localhost:{port}", nproc, rank)
+import jax
+assert jax.process_count() == nproc, jax.process_count()
+
+from repro.core import bz_core_numbers, kcore_decompose, \
+    kcore_decompose_sharded
+from repro.graph import generators as gen
+
+mesh = compat.global_mesh("shard")
+assert compat.is_multiprocess_mesh(mesh)
+g = gen.barabasi_albert(300, 3, seed=7)
+
+# the per-round host loop cannot span processes — loud error, not a hang
+try:
+    kcore_decompose_sharded(g, mesh, ("shard",))
+    raise SystemExit("expected ValueError for non-fused multiprocess")
+except ValueError:
+    pass
+
+res = kcore_decompose_sharded(g, mesh, ("shard",), fused=True)
+ref = kcore_decompose(g)          # process-local single-device reference
+assert (res.core == ref.core).all(), "core mismatch"
+assert (res.core == bz_core_numbers(g)).all(), "bz mismatch"
+assert (res.stats.messages_per_round
+        == ref.stats.messages_per_round).all(), "msg bill mismatch"
+assert (res.stats.active_per_round
+        == ref.stats.active_per_round).all(), "active mismatch"
+assert (res.stats.changed_per_round
+        == ref.stats.changed_per_round).all(), "changed mismatch"
+assert res.rounds == ref.rounds
+print(json.dumps({"rank": rank, "devices": jax.device_count(),
+                  "local_devices": jax.local_device_count(),
+                  "rounds": res.rounds,
+                  "messages": int(res.stats.total_messages)}))
+"""
+
+_NO_COLLECTIVES = ("Multiprocess computations aren't implemented",
+                   "collectives", "UNIMPLEMENTED")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def test_fused_sharded_spans_two_processes():
+    nproc, port = 2, _free_port()
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _RANK_SCRIPT, str(r), str(nproc), str(port)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=_ENV, cwd="/root/repo") for r in range(nproc)]
+    outs = [p.communicate(timeout=500) for p in procs]
+    for p, (out, err) in zip(procs, outs):
+        if p.returncode != 0 and any(s in err for s in _NO_COLLECTIVES):
+            pytest.skip("no CPU cross-process collectives in this jax")
+        assert p.returncode == 0, err[-2000:]
+    reports = [json.loads(out.strip().splitlines()[-1]) for out, _ in outs]
+    # every rank saw the GLOBAL topology and the same exact result
+    for rep in reports:
+        assert rep["devices"] == 4
+        assert rep["local_devices"] == 2
+    assert reports[0]["rounds"] == reports[1]["rounds"] > 0
+    assert reports[0]["messages"] == reports[1]["messages"] > 0
+
+
+def test_multiprocess_helpers_single_process():
+    """The compat helpers degrade cleanly on an ordinary single process."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distribution import compat
+
+    assert not compat.is_multiprocess()
+    mesh = compat.global_mesh("shard")
+    assert not compat.is_multiprocess_mesh(mesh)
+    n_dev = len(mesh.devices.flat)
+    arr = np.arange(n_dev * 3, dtype=np.int32).reshape(n_dev, 3)
+    staged = compat.stage_to_mesh(arr, mesh, P("shard"))
+    np.testing.assert_array_equal(compat.fetch_replicated(staged, mesh), arr)
+    # hint is safe to call repeatedly even after backend init
+    compat.cpu_collectives_hint()

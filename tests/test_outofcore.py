@@ -1,0 +1,172 @@
+"""Out-of-core block-cycling driver: bit-equal cores AND message bills vs
+the in-memory modes (BZ-oracle-verified), frontier block skipping, and
+bounded-cache cycling."""
+
+import numpy as np
+import pytest
+
+from repro.core.bz import bz_core_numbers
+from repro.core.kcore import kcore_decompose
+from repro.core.outofcore import OutOfCoreStats, outofcore_decompose
+from repro.graph import generators as gen
+from repro.graph.blockstore import BlockStore
+
+
+def _assert_bill_equal(a, b):
+    np.testing.assert_array_equal(a.stats.messages_per_round,
+                                  b.stats.messages_per_round)
+    np.testing.assert_array_equal(a.stats.active_per_round,
+                                  b.stats.active_per_round)
+    np.testing.assert_array_equal(a.stats.changed_per_round,
+                                  b.stats.changed_per_round)
+    assert a.rounds == b.rounds
+
+
+@pytest.mark.parametrize("family,kw", [
+    ("erdos_renyi", dict(n=300, m=1200)),
+    ("barabasi_albert", dict(n=400, m_attach=3)),
+    ("community", dict(n=300, n_blocks=5, deg_in=6, deg_out=1)),
+    ("rmat", dict(scale=8, edge_factor=4)),
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bit_equal_vs_host_and_bz(family, kw, seed):
+    g = getattr(gen, family)(**kw, seed=seed)
+    ref = kcore_decompose(g)
+    ooc = outofcore_decompose(g, mem_budget=8192)
+    assert ooc.converged
+    np.testing.assert_array_equal(ooc.core, bz_core_numbers(g))
+    np.testing.assert_array_equal(ooc.core, ref.core)
+    _assert_bill_equal(ooc, ref)
+
+
+def test_bit_equal_vs_fused():
+    g = gen.barabasi_albert(500, 3, seed=2)
+    fused = kcore_decompose(g, fused=True)
+    ooc = outofcore_decompose(g, n_blocks=8)
+    np.testing.assert_array_equal(ooc.core, fused.core)
+    _assert_bill_equal(ooc, fused)
+
+
+def test_forced_budget_cycles_blocks():
+    """The acceptance gate: a budget far below the arc arrays forces the
+    LRU to actually cycle (≥1 eviction) while staying exact."""
+    g = gen.barabasi_albert(600, 4, seed=3)
+    ooc = outofcore_decompose(g, mem_budget=4096)
+    bs = ooc.block_stats
+    assert bs.n_blocks > 1
+    assert bs.evictions >= 1
+    assert bs.device_block_bytes < bs.total_arc_bytes
+    assert bs.mem_budget == 4096
+    np.testing.assert_array_equal(ooc.core, bz_core_numbers(g))
+
+
+def test_frontier_skips_blocks():
+    """As the frontier collapses, whole blocks go quiet and are skipped
+    without loading. A community graph localizes late-round activity."""
+    g = gen.community(n=400, n_blocks=8, deg_in=8, deg_out=1, seed=4)
+    ooc = outofcore_decompose(g, n_blocks=16)
+    bs = ooc.block_stats
+    assert bs.blocks_skipped >= 1
+    assert 0.0 < bs.skip_rate < 1.0
+    # skipped + executed block-rounds account for every (round, block) pair
+    # after round 1 plus round 1 itself
+    assert bs.block_rounds + bs.blocks_skipped == bs.rounds * bs.n_blocks
+    np.testing.assert_array_equal(ooc.core, bz_core_numbers(g))
+
+
+def test_store_path_input(tmp_path):
+    """Decompose straight from a store directory — degrees reconstructed
+    from the blocks on a streaming pass."""
+    g = gen.barabasi_albert(300, 3, seed=5)
+    BlockStore.create(tmp_path / "s", g, n_blocks=4)
+    ref = kcore_decompose(g)
+    ooc = outofcore_decompose(str(tmp_path / "s"))
+    np.testing.assert_array_equal(ooc.core, ref.core)
+    _assert_bill_equal(ooc, ref)
+
+
+def test_open_store_input(tmp_path):
+    g = gen.erdos_renyi(n=250, m=1000, seed=6)
+    store = BlockStore.create(tmp_path / "s", g, n_blocks=4)
+    ooc = outofcore_decompose(store, deg=g.deg)
+    np.testing.assert_array_equal(ooc.core, bz_core_numbers(g))
+    # caller-owned store survives the decomposition
+    assert (tmp_path / "s" / "manifest.json").exists()
+
+
+def test_structured_graphs():
+    assert (outofcore_decompose(gen.complete(12), n_blocks=3).core == 11).all()
+    assert (outofcore_decompose(gen.cycle(20), n_blocks=4).core == 2).all()
+    assert (outofcore_decompose(gen.star(15), n_blocks=2).core == 1).all()
+
+
+def test_isolated_vertices_and_empty():
+    g = gen.erdos_renyi(n=60, m=40, seed=7)  # sparse → isolated vertices
+    ref = kcore_decompose(g)
+    ooc = outofcore_decompose(g, n_blocks=4)
+    np.testing.assert_array_equal(ooc.core, ref.core)
+    _assert_bill_equal(ooc, ref)
+    from repro.graph.structs import Graph
+    empty = outofcore_decompose(Graph.from_edges(np.zeros((0, 2), np.int64)))
+    assert empty.core.shape == (0,)
+    assert empty.converged
+
+
+def test_stats_json_round_trip():
+    g = gen.barabasi_albert(200, 3, seed=8)
+    bs = outofcore_decompose(g, mem_budget=4096).block_stats
+    d = bs.to_json()
+    assert d["device_block_bytes"] < d["total_arc_bytes"]
+    assert d["skip_rate"] == round(bs.skip_rate, 4)
+    assert set(d) >= {"n_blocks", "rounds", "blocks_loaded", "blocks_skipped",
+                      "evictions", "peak_rss_bytes", "ms_per_round",
+                      "imbalance"}
+    assert isinstance(bs, OutOfCoreStats)
+
+
+def test_flight_recorder_sees_out_of_core_run():
+    """One flight run per decomposition, mode="out_of_core", with the
+    block-cycling attrs on the run_end event and a bit-equal round series
+    vs the host loop's recording."""
+    from repro.obs import flight
+    flight.enable()
+    flight.reset()
+    ends = []
+    rec = flight.get_recorder()
+    rec.add_observer(lambda ev: ends.append(ev)
+                     if ev["kind"] == "run_end" else None)
+    try:
+        g = gen.barabasi_albert(150, 3, seed=9)
+        ref = kcore_decompose(g)
+        ref_series = [(r.round, r.frontier, r.messages, r.changed)
+                      for r in flight.records()]
+        flight.reset()
+        ooc = outofcore_decompose(g, mem_budget=4096)
+        ooc_series = [(r.round, r.frontier, r.messages, r.changed)
+                      for r in flight.records()]
+        assert ooc_series == ref_series
+        end = ends[-1]
+        assert end["mode"] == "out_of_core"
+        assert end["converged"]
+        assert end["blocks_loaded"] == ooc.block_stats.blocks_loaded
+        assert end["blocks_skipped"] == ooc.block_stats.blocks_skipped
+        assert end["device_block_bytes"] > 0
+        assert end["peak_rss_bytes"] > 0
+        assert rec.last_run_rounds == ooc.rounds
+        np.testing.assert_array_equal(ooc.core, ref.core)
+    finally:
+        rec._observers.clear()
+        flight.disable()
+        flight.reset()
+
+
+def test_metrics_published():
+    from repro.obs import metrics
+    g = gen.barabasi_albert(150, 3, seed=10)
+    before = metrics.counter("kcore_ooc_blocks_loaded_total").value
+    ooc = outofcore_decompose(g, mem_budget=4096)
+    after = metrics.counter("kcore_ooc_blocks_loaded_total").value
+    assert after - before == ooc.block_stats.blocks_loaded
+    assert metrics.gauge("kcore_ooc_device_block_bytes").value == \
+        ooc.block_stats.device_block_bytes
+    assert metrics.gauge("kcore_block_imbalance").value >= 1.0

@@ -1,0 +1,147 @@
+"""Direct edge-case coverage for the shard layout contract
+(partition.shard_layout / shard_arc_arrays / shard_graph) — previously only
+exercised indirectly through the mesh tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.bz import bz_core_numbers
+from repro.core.kcore import kcore_decompose
+from repro.graph import generators as gen
+from repro.graph.partition import (balance_from_counts, balance_report,
+                                   shard_arc_arrays, shard_graph,
+                                   shard_layout)
+from repro.graph.structs import Graph
+
+
+def _unshard_arcs(sg):
+    """Recover the global (src, dst) pairs of all real arcs from a shard."""
+    src, dst = [], []
+    for d in range(sg.n_shards):
+        m = sg.arc_mask[d]
+        src.append(sg.src[d][m] + d * sg.verts_per_shard)
+        dst.append(sg.dst[d][m])
+    return np.concatenate(src), np.concatenate(dst)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4, 7, 8])
+def test_round_trip_preserves_arcs(n_shards):
+    g = gen.barabasi_albert(97, 3, seed=0)  # prime n: never divides evenly
+    sg = shard_graph(g, n_shards)
+    s, d = _unshard_arcs(sg)
+    np.testing.assert_array_equal(s, g.src)
+    np.testing.assert_array_equal(d, g.dst)
+    # vertex bookkeeping covers exactly the real vertices
+    assert int(sg.vert_mask.sum()) == g.n
+    np.testing.assert_array_equal(sg.deg.reshape(-1)[: g.n][
+        sg.vert_mask.reshape(-1)[: g.n]], g.deg)
+
+
+def test_empty_shard():
+    """More shards than occupied vertex ranges: trailing shards hold only
+    padding, and the engines still decompose exactly."""
+    g = gen.star(5)  # hub + 4 leaves
+    assert g.n == 5
+    sg = shard_graph(g, 8)
+    assert sg.verts_per_shard == 1
+    live = sg.arc_mask.sum(axis=1)
+    assert live[0] == 4           # the hub owns every outgoing arc
+    assert (live[5:] == 0).all()  # shards 5..7 are pure padding
+    assert not sg.vert_mask[5:].any()
+    # padding arcs carry in-range sentinels (mask False keeps them inert)
+    assert (sg.dst < sg.n_pad).all()
+    assert (sg.src < sg.verts_per_shard).all()
+
+
+def test_isolated_vertices():
+    """Vertices with no arcs shard cleanly (zero-length arc runs)."""
+    g = Graph.from_edges([(0, 1)], n=10)  # vertices 2..9 isolated
+    sg = shard_graph(g, 4)
+    s, d = _unshard_arcs(sg)
+    np.testing.assert_array_equal(s, g.src)
+    np.testing.assert_array_equal(d, g.dst)
+    assert int(sg.deg.sum()) == 2
+
+
+def test_single_arc_graph():
+    g = Graph.from_edges([(0, 1)], n=2)
+    for n_shards in (1, 2, 4):
+        sg = shard_graph(g, n_shards)
+        s, d = _unshard_arcs(sg)
+        np.testing.assert_array_equal(s, [0, 1])
+        np.testing.assert_array_equal(d, [1, 0])
+
+
+def test_empty_graph():
+    g = Graph.from_edges(np.zeros((0, 2), np.int64), n=0)
+    sg = shard_graph(g, 4)
+    assert sg.n_real == 0
+    assert not sg.arc_mask.any()
+    assert not sg.vert_mask.any()
+
+
+@pytest.mark.parametrize("n", [1, 5, 97, 100])
+@pytest.mark.parametrize("n_shards", [1, 3, 4])
+def test_layout_geometry(n, n_shards):
+    """shard_layout invariants on non-pow2 sizes: full cover, ordered
+    bounds, A covers the longest run."""
+    rng = np.random.default_rng(n * 31 + n_shards)
+    deg = rng.integers(0, 5, n)
+    src = np.repeat(np.arange(n, dtype=np.int32), deg)
+    V, A, bounds = shard_layout(n, src, n_shards)
+    assert V * n_shards >= n
+    assert bounds.shape == (n_shards + 1,)
+    assert bounds[0] == 0 and bounds[-1] == len(src)
+    assert (np.diff(bounds) >= 0).all()
+    assert A >= int(np.diff(bounds).max() if n_shards else 1)
+    assert A % 8 == 0
+    # the floor knob never shrinks A
+    _, A_floor, _ = shard_layout(n, src, n_shards, min_arcs_per_shard=A + 8)
+    assert A_floor == A + 8
+
+
+def test_shard_layout_matches_shard_arc_arrays():
+    g = gen.erdos_renyi(n=120, m=480, seed=1)
+    V, A, _ = shard_layout(g.n, g.src, 4)
+    sg = shard_graph(g, 4)
+    assert (V, A) == (sg.verts_per_shard, sg.arcs_per_shard)
+
+
+def test_sharded_decomposition_on_awkward_shapes():
+    """Non-pow2 n with empty shards still decomposes to BZ-exact cores."""
+    from repro.distribution.compat import make_mesh
+    from repro.core.kcore import kcore_decompose_sharded
+    g = gen.barabasi_albert(101, 2, seed=3)
+    mesh = make_mesh((1,), ("d",))
+    res = kcore_decompose_sharded(g, mesh, ("d",))
+    np.testing.assert_array_equal(res.core, bz_core_numbers(g))
+    np.testing.assert_array_equal(res.core, kcore_decompose(g).core)
+
+
+def test_balance_from_counts():
+    rep = balance_from_counts(np.array([10, 20, 30]), padded_A=32)
+    assert rep["arcs_per_shard_max"] == 30
+    assert rep["arcs_per_shard_min"] == 10
+    assert rep["arcs_per_shard_mean"] == 20.0
+    assert rep["imbalance"] == pytest.approx(1.5)
+    assert rep["padded_A"] == 32
+    empty = balance_from_counts(np.zeros(0), padded_A=8)
+    assert empty["arcs_per_shard_max"] == 0
+    g = gen.barabasi_albert(100, 3, seed=4)
+    sg = shard_graph(g, 4)
+    assert balance_report(sg) == balance_from_counts(
+        sg.arc_mask.sum(axis=1), sg.arcs_per_shard)
+
+
+def test_dead_slots_shard_without_resort():
+    """src-sorted arrays with dead slots (the streaming CSR) shard by slot
+    position; dead slots stay dead."""
+    src = np.array([0, 0, 1, 1, 2, 3], np.int32)
+    dst = np.array([1, 3, 0, 2, 1, 0], np.int32)
+    mask = np.array([True, False, True, True, False, True])
+    deg = np.array([1, 2, 0, 1], np.int32)
+    sg = shard_arc_arrays(4, src, dst, mask, deg, 2)
+    assert int(sg.arc_mask.sum()) == 4
+    s, d = _unshard_arcs(sg)
+    np.testing.assert_array_equal(s, src[mask])
+    np.testing.assert_array_equal(d, dst[mask])
