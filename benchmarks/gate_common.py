@@ -17,10 +17,24 @@ silently disarm the gate).
 
 import argparse
 import json
+import os
 import pathlib
 
 GATE_HELP = "fail when mean_ratio > baseline * this factor + slack"
 MATCH_HELP = "fail on baseline-settings mismatch instead of skipping"
+
+
+def write_job_summary(lines) -> None:
+    """Append a markdown block to the GitHub Actions job summary.
+
+    No-op outside Actions ($GITHUB_STEP_SUMMARY unset), so gates and
+    benchmarks call it unconditionally; in CI the verdict tables land on
+    the run's summary page instead of only in scrollback."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n\n")
 
 
 def gate_main(*, run_records, settings, summarize, baseline, default_out,
@@ -60,11 +74,15 @@ def gate_main(*, run_records, settings, summarize, baseline, default_out,
                 base[f"info_{key}"] = vals
         pathlib.Path(args.baseline).write_text(json.dumps(base, indent=2))
         print(f"wrote baseline {args.baseline}")
+        write_job_summary([f"### `{label}` gate",
+                           f"baseline refreshed → `{args.baseline}`"])
         return 0
 
     base_path = pathlib.Path(args.baseline)
     if not base_path.exists():
         print(f"no baseline at {args.baseline}; nothing to gate against")
+        write_job_summary([f"### `{label}` gate",
+                           f"**FAIL** — no baseline at `{args.baseline}`"])
         return 1
     base = json.loads(base_path.read_text())
     if base.get("settings") != settings():
@@ -72,6 +90,10 @@ def gate_main(*, run_records, settings, summarize, baseline, default_out,
             "baseline settings differ from this run "
             f"({base.get('settings')} vs {settings()})",
         )
+        verdict = ("**FAIL** — baseline settings mismatch"
+                   if args.require_match else
+                   "skipped — baseline settings mismatch")
+        write_job_summary([f"### `{label}` gate", verdict])
         if args.require_match:
             print("refusing to gate against a stale baseline; regenerate it")
             return 1
@@ -79,10 +101,14 @@ def gate_main(*, run_records, settings, summarize, baseline, default_out,
         return 0
 
     failures = []
+    table = [f"### `{label}` gate", "",
+             "| key | mean_ratio | baseline | limit | status |",
+             "|---|---|---|---|---|"]
     for key, base_ratio in base["mean_ratio"].items():
         cur = summary.get(key)
         if cur is None:
             failures.append(f"{key}: missing from current run")
+            table.append(f"| {key} | — | {base_ratio} | — | MISSING |")
             continue
         limit = base_ratio * args.max_regression + args.abs_slack
         status = "OK" if cur["mean_ratio"] <= limit else "REGRESSED"
@@ -90,10 +116,15 @@ def gate_main(*, run_records, settings, summarize, baseline, default_out,
             f"{key}: ratio {cur['mean_ratio']} vs baseline {base_ratio} "
             f"(limit {limit:.4f}) {status}",
         )
+        table.append(f"| {key} | {cur['mean_ratio']} | {base_ratio} | "
+                     f"{limit:.4f} | {status} |")
         if cur["mean_ratio"] > limit:
             detail = f"(baseline {base_ratio})"
             failures.append(
                 f"{key}: {cur['mean_ratio']} > {limit:.4f} {detail}")
+    table.append("")
+    table.append("**FAIL**" if failures else "**PASS**")
+    write_job_summary(table)
     if failures:
         print(f"{label} message-ratio regression:", *failures, sep="\n  ")
         return 1

@@ -31,6 +31,7 @@ BENCHES = {
     "roofline": "benchmarks.roofline",
     "streaming": "benchmarks.streaming_maintenance",
     "temporal": "benchmarks.temporal_replay",
+    "serving": "benchmarks.serving_mixed",
     "static": "benchmarks.static_decomposition",
     "scale": "benchmarks.scale_decomposition",
 }

@@ -47,6 +47,7 @@ import sys
 import time
 
 from benchmarks.common import csv_row
+from benchmarks.gate_common import write_job_summary
 from repro.core.bz import bz_core_numbers
 from repro.core.kcore import kcore_decompose
 from repro.core.outofcore import outofcore_decompose
@@ -182,6 +183,20 @@ def main() -> int:
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out} ({len(records)} records)")
+    table = [
+        "### `scale` (out-of-core) smoke",
+        "",
+        "| graph | n | device/total bytes | rounds | evictions | verified |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        table.append(
+            f"| {r['graph']} | {r['vertices']} | "
+            f"{r['device_block_bytes']:,} / {r['total_arc_bytes']:,} "
+            f"({r['device_frac']:.1%}) | {r['rounds']} | "
+            f"{r['evictions']} | {r['verified']} |"
+        )
+    write_job_summary(table)
     for r in records:
         print(
             f"{r['graph']} n={r['vertices']} m={r['edges']}: "

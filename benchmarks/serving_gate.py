@@ -1,0 +1,46 @@
+"""CI gate over the mixed-traffic serving benchmark.
+
+Runs benchmarks.serving_mixed (concurrent readers hammering snapshots
+while the writer replays a temporal trace), writes the full structured
+output to BENCH_serving.json, and fails if the write path's mean
+incremental/from-scratch message ratio regresses past the threshold
+against the committed baseline (benchmarks/serving_baseline.json).
+
+This is an exactness lock more than a perf gate: readers never touch the
+engine, so the bills under concurrent load must be bit-identical to the
+same replay without readers — a drifting ratio here means the front end
+started perturbing convergence. Latency/staleness are reported as
+informational columns; the benchmark itself asserts the serving
+acceptance bar (reads proceed during re-convergence, every response
+bit-equal to a BZ-anchored fixpoint).
+
+    # CI (smoke settings; the workflow sets the env knobs):
+    python -m benchmarks.serving_gate --require-match
+
+    # refresh the committed baseline after an intended perf change:
+    REPRO_SERVING_BENCH_N=800 REPRO_SERVING_BENCH_TICKS=4 \
+        python -m benchmarks.serving_gate --write-baseline
+"""
+
+import pathlib
+import sys
+
+from benchmarks.gate_common import gate_main
+from benchmarks.serving_mixed import run_records, settings, summarize
+
+BASELINE = pathlib.Path(__file__).parent / "serving_baseline.json"
+
+
+def main() -> int:
+    return gate_main(
+        run_records=run_records,
+        settings=settings,
+        summarize=summarize,
+        baseline=BASELINE,
+        default_out="BENCH_serving.json",
+        label="serving",
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

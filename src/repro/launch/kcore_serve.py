@@ -32,6 +32,17 @@ path (.npz or text event log) or a generator spec: ``snap:<ABBREV>``
 ``ba`` (timestamped preferential attachment at --n), or ``contact``
 (contact-network bursts at --n).
 
+--concurrent N serves the read side from an N-worker snapshot-isolated
+pool (streaming.concurrent): reads keep answering the last converged
+fixpoint while the single writer re-converges, and with --listen the
+/query/* HTTP routes go live for external clients. --checkpoint-dir DIR
+adds warm restarts: the latest checkpoint in DIR is loaded at startup,
+and the full server state (engine CSR + cores + window cursor + as-of
+ring) is saved on exit — including a SIGTERM/SIGINT drain — so a killed
+replay resumes in lockstep (bit-equal cores and message bills; the
+per-tick RNG is derived from (seed, tick), never threaded through the
+loop).
+
 --mesh N runs the maintenance engine mesh-native on an N-device ("data",)
 mesh: the initial decomposition and the per-batch masked supersteps execute
 as shard_map programs. If fewer than N real devices exist, N host (CPU)
@@ -96,6 +107,19 @@ def parse_args():
                     help="removal-event fraction for generated traces")
     ap.add_argument("--asof-capacity", type=int, default=16,
                     help="retained window boundaries for core_asof queries")
+    ap.add_argument("--concurrent", type=int, default=0, metavar="N",
+                    help="serve reads from an N-worker snapshot-isolated "
+                         "pool while the single writer re-converges "
+                         "(streaming.concurrent); with --listen, also "
+                         "mounts live /query/* HTTP routes. 0 = the "
+                         "sequential serve loop (default)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="warm restarts: resume from the latest checkpoint "
+                         "in DIR at startup (if any) and save the full "
+                         "server state there on exit — including a SIGTERM/"
+                         "SIGINT drain. A resumed replay continues in "
+                         "lockstep: identical batches, cores, and message "
+                         "bills to an uninterrupted run")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable span tracing and export a Chrome "
                          "trace_event JSON (open in Perfetto)")
@@ -130,6 +154,81 @@ def _fmt_stats(stats: dict) -> dict:
         return v
 
     return {k: _r(v) for k, v in stats.items()}
+
+
+def _tick_rng(seed: int, tick: int):
+    """Per-tick RNG derived from (seed, tick) — NOT one stream threaded
+    through the loop — so a run resumed from a checkpoint at tick T draws
+    exactly what the uninterrupted run drew at T (lockstep replay; the
+    warm-restart test asserts bit-equal cores AND message bills)."""
+    import numpy as np
+    return np.random.default_rng((int(seed), int(tick)))
+
+
+def _install_stop():
+    """SIGTERM/SIGINT → graceful drain: the serving loop finishes its
+    current tick, then checkpoints (with --checkpoint-dir) and exits 0."""
+    import signal
+    import threading
+    stop = threading.Event()
+
+    def _handler(signum, frame):  # noqa: ARG001 - signal API
+        if not stop.is_set():
+            print(f"# signal {signum}: draining after current tick",
+                  flush=True)
+        stop.set()
+
+    signal.signal(signal.SIGTERM, _handler)
+    signal.signal(signal.SIGINT, _handler)
+    return stop
+
+
+def _maybe_restore(args, server) -> int:
+    """Warm restart: load the latest checkpoint in --checkpoint-dir (if
+    any) into the freshly constructed server. Returns the tick to resume
+    from (the checkpoint's step; 0 = fresh start)."""
+    if not args.checkpoint_dir:
+        return 0
+    from repro.checkpoint import latest_step, restore_checkpoint
+    step = latest_step(args.checkpoint_dir)
+    if step is None:
+        return 0
+    state, _ = restore_checkpoint(args.checkpoint_dir,
+                                  like=server.state_dict(), step=step)
+    server.load_state_dict(state)
+    print(f"# resumed: step {step} from {args.checkpoint_dir} "
+          f"(m={server.engine.m} max_k={server.max_k()} "
+          f"asof_boundaries={len(server.asof_ring)})", flush=True)
+    return int(step)
+
+
+def _front_end(args, server, httpd=None):
+    """--concurrent N: wrap the server in the snapshot-isolated threaded
+    front end and (with --listen) mount it on the /query/* HTTP routes."""
+    if not args.concurrent:
+        return None
+    from repro.streaming import ConcurrentKCoreServer
+    front = ConcurrentKCoreServer(server, read_workers=args.concurrent,
+                                  checkpoint_dir=args.checkpoint_dir)
+    if httpd is not None:
+        httpd.attach_query_backend(front)
+        print(f"# obs: /query/* mounted ({args.concurrent} read workers)",
+              flush=True)
+    return front
+
+
+def _save_on_exit(args, front, server, tick: int) -> None:
+    """Drain the front end and persist full server state for warm restart."""
+    if front is not None:
+        path = front.drain(save=bool(args.checkpoint_dir), step=tick)
+    elif args.checkpoint_dir:
+        from repro.checkpoint import save_checkpoint
+        path = save_checkpoint(args.checkpoint_dir, int(tick),
+                               server.state_dict())
+    else:
+        return
+    if path:
+        print(f"# checkpoint: step {tick} -> {path}", flush=True)
 
 
 def build_graph(args, generators):
@@ -176,18 +275,22 @@ def replay_serve(args, mesh, httpd=None) -> None:
     server = KCoreServer(windowed=weng, asof_capacity=args.asof_capacity)
     if httpd is not None:
         httpd.add_registry(server.metrics)
+    start_tick = _maybe_restore(args, server)
+    front = _front_end(args, server, httpd=httpd)
+    stop = _install_stop()
     print(f"# events={args.events} n={log.n} log_events={len(log)} "
           f"adds={log.num_adds} window={args.window} stride={args.stride} "
           f"by={args.by} mesh={args.mesh or 1} frontier={args.frontier} "
-          f"init_wall_s={time.perf_counter() - t0:.2f}")
-    rng = np.random.default_rng(args.seed)
+          f"init_wall_s={time.perf_counter() - t0:.2f}", flush=True)
 
     print("tick,t_hi,m,inserted,deleted,inc_messages,scratch_messages,"
           "ratio,rounds,mode,patch_s,compactions,occupancy,queries,query_s,"
-          "max_k,asof_t,verified")
-    tick = 0
-    while not weng.done and tick < args.batches:
-        ws = server.advance_window()
+          "max_k,asof_t,verified", flush=True)
+    tick = start_tick
+    while not weng.done and tick < args.batches and not stop.is_set():
+        rng = _tick_rng(args.seed, tick)
+        ws = (front.advance_window() if front is not None
+              else server.advance_window())
         res = ws.result
 
         qids = rng.integers(0, log.n, size=args.queries)
@@ -199,7 +302,10 @@ def replay_serve(args, mesh, httpd=None) -> None:
                         vertices=qids[: args.queries // 2]),
                 Request(op="max_k")]
         t0 = time.perf_counter()
-        server.serve(reqs)
+        if front is not None:
+            front.serve_concurrent(reqs)
+        else:
+            server.serve(reqs)
         query_s = time.perf_counter() - t0
 
         wg = weng.window_graph()
@@ -214,11 +320,13 @@ def replay_serve(args, mesh, httpd=None) -> None:
             scratch.stats.total_messages, round(ratio, 4), res.rounds,
             res.mode, round(res.patch_s, 5), res.csr_compactions,
             round(res.csr_occupancy, 3), args.queries, round(query_s, 4),
-            server.max_k(), round(asof_t, 3), verified)))
+            server.max_k(), round(asof_t, 3), verified)), flush=True)
         tick += 1
 
     print(f"# asof_boundaries={np.round(server.asof_boundaries(), 3).tolist()}")
-    print(f"# final_stats={_fmt_stats(server.stats())}")
+    stats = front.stats() if front is not None else server.stats()
+    print(f"# final_stats={_fmt_stats(stats)}")
+    _save_on_exit(args, front, server, tick)
     _finish_obs(args, server)
 
 
@@ -309,18 +417,23 @@ def main() -> None:
     print(f"# graph={args.graph} n={g.n} m={g.m} mesh={args.mesh or 1} "
           f"frontier={args.frontier} "
           f"init_messages={server.engine.init_result.stats.total_messages} "
-          f"init_wall_s={time.perf_counter() - t0:.2f}")
-    rng = np.random.default_rng(args.seed)
+          f"init_wall_s={time.perf_counter() - t0:.2f}", flush=True)
+    start_tick = _maybe_restore(args, server)
+    front = _front_end(args, server, httpd=httpd)
+    stop = _install_stop()
 
     cols = ("tick,m,inserted,deleted,inc_messages,scratch_messages,ratio,"
             "rounds,region,seed_changed,mode,patch_s,queries,query_s,max_k,"
             "verified")
-    print(cols)
-    for tick in range(args.batches):
+    print(cols, flush=True)
+    tick = start_tick
+    while tick < args.batches and not stop.is_set():
+        rng = _tick_rng(args.seed, tick)
         b = max(2, int(args.churn * server.engine.graph.m))
         batch = random_churn_batch(server.engine.graph, b // 2, b - b // 2,
                                    rng)
-        res = server.update(batch)
+        res = front.update(batch) if front is not None \
+            else server.update(batch)
 
         # query load: batched core-number lookups + membership/max-k probes
         n = server.engine.graph.n
@@ -331,7 +444,10 @@ def main() -> None:
                 Request(op="members", k=server.max_k()),
                 Request(op="max_k")]
         t0 = time.perf_counter()
-        server.serve(reqs)
+        if front is not None:
+            front.serve_concurrent(reqs)
+        else:
+            server.serve(reqs)
         query_s = time.perf_counter() - t0
 
         scratch = kcore_decompose(server.engine.graph)
@@ -347,9 +463,12 @@ def main() -> None:
             scratch.stats.total_messages, round(ratio, 4), res.rounds,
             res.region_size, res.seed_changed, res.mode,
             round(res.patch_s, 5), args.queries,
-            round(query_s, 4), server.max_k(), verified)))
+            round(query_s, 4), server.max_k(), verified)), flush=True)
+        tick += 1
 
-    print(f"# final_stats={_fmt_stats(server.stats())}")
+    stats = front.stats() if front is not None else server.stats()
+    print(f"# final_stats={_fmt_stats(stats)}")
+    _save_on_exit(args, front, server, tick)
     _finish_obs(args, server)
 
 

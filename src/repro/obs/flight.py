@@ -135,6 +135,9 @@ class _NullRecorder:
     def record_fused_rounds(self, *a, **kw) -> None:
         pass
 
+    def note_event(self, *a, **kw) -> None:
+        pass
+
     def end_run(self, *a, **kw) -> None:
         pass
 
@@ -159,6 +162,9 @@ class FlightRecorder:
         self._context: dict = {}           # merged into the next start_run
         self._watch: np.ndarray = np.zeros(0, np.int64)
         self._timelines: dict[int, list] = {}
+        # out-of-band events (snapshot flips, checkpoint saves, ...) — a
+        # separate small ring so they never evict convergence rounds
+        self._events: deque[dict] = deque(maxlen=self.capacity)
         self._observers: list = []
         self.last_run_rounds = 0           # rounds of the last FINISHED run
         self.rounds_recorded = 0           # total rounds ever recorded
@@ -281,6 +287,26 @@ class FlightRecorder:
                     device_s=per_round, compiles=compiles if i == 0 else 0,
                     dispatch=dispatch or None)
 
+    def note_event(self, kind: str, **attrs) -> None:
+        """Record an out-of-band serving event (e.g. a snapshot buffer
+        flip or a checkpoint save) alongside the convergence rounds.
+
+        Events live in their own bounded ring, are exported under
+        ``"events"`` in ``to_json()``, and stream to observers as
+        ``{"kind": "event", ...}`` — so the health monitor and the
+        ``/debug/flight`` endpoint see buffer flips in sequence with the
+        re-convergence they raced against.
+        """
+        with self._lock:
+            ev = {"kind": str(kind), "t": time.perf_counter(), **attrs}
+            self._events.append(ev)
+            self._notify({"kind": "event", "event": ev})
+
+    def events(self, last: int | None = None) -> list[dict]:
+        with self._lock:
+            evs = list(self._events)
+        return evs if last is None else evs[-int(last):]
+
     def end_run(self, converged: bool = True, **attrs) -> None:
         with self._lock:
             self._finish_run(converged=bool(converged), **attrs)
@@ -372,6 +398,7 @@ class FlightRecorder:
                 "rounds_recorded": self.rounds_recorded,
                 "dropped": max(self.rounds_recorded - len(self._ring), 0),
                 "records": [r.to_json() for r in self.records(last)],
+                "events": self.events(last),
                 "watch": self.timelines(),
             }
 
@@ -388,6 +415,7 @@ class FlightRecorder:
             self._run = None
             self._context = {}
             self._timelines = {v: [] for v in self._timelines}
+            self._events.clear()
             self.last_run_rounds = 0
             self.rounds_recorded = 0
 

@@ -1,7 +1,7 @@
 """Dependency-free threaded HTTP endpoint for live observability.
 
 ``ObsHTTPServer`` is a stdlib ``ThreadingHTTPServer`` on a daemon thread
-serving three read-only routes:
+serving read-only routes:
 
 * ``/metrics`` — Prometheus text exposition (the process-default metrics
   registry plus any registries added via ``add_registry``, e.g. a
@@ -9,7 +9,17 @@ serving three read-only routes:
 * ``/healthz`` — the invariant monitor's verdict as JSON; HTTP 200 while
   healthy, 503 once an anomaly has been observed;
 * ``/debug/flight`` — the flight recorder's recent rounds (and watchlist
-  timelines) as JSON; ``?n=50`` limits to the last n records.
+  timelines) as JSON; ``?n=50`` limits to the last n records;
+* ``/query/<op>`` — live core-number reads, once a snapshot-isolated
+  query backend has been attached via ``attach_query_backend`` (the
+  ``ConcurrentKCoreServer`` in streaming/concurrent.py — duck-typed so
+  the obs layer never imports streaming). Ops mirror the serving layer:
+  ``/query/core?v=1,2,3``, ``/query/in_kcore?v=..&k=..``,
+  ``/query/members?k=..``, ``/query/max_k``,
+  ``/query/core_asof?t=..[&v=..]``, plus ``/query/stats``. Malformed
+  requests come back HTTP 400 with a structured ``{"error": ...}`` body
+  (the backend's contract: bad requests never touch serving state);
+  a draining backend answers 503.
 
 Mounted by ``kcore_serve --listen PORT``; ``port=0`` binds an ephemeral
 port (tests). The server is intentionally started BEFORE heavy jax
@@ -25,7 +35,7 @@ from urllib.parse import parse_qs, urlparse
 
 from repro.obs import flight, health, metrics
 
-_INDEX = b"repro obs: /metrics /healthz /debug/flight\n"
+_INDEX = b"repro obs: /metrics /healthz /debug/flight /query/<op>\n"
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -59,6 +69,8 @@ class _Handler(BaseHTTPRequestHandler):
                 payload["enabled"] = flight.enabled()
                 self._reply(200, json.dumps(payload).encode(),
                             "application/json")
+            elif url.path.startswith("/query/"):
+                self._query(url)
             elif url.path == "/":
                 self._reply(200, _INDEX, "text/plain; charset=utf-8")
             else:
@@ -66,6 +78,37 @@ class _Handler(BaseHTTPRequestHandler):
         except Exception as exc:  # never kill the serving thread
             self._reply(500, f"error: {exc}\n".encode(),
                         "text/plain; charset=utf-8")
+
+    def _query(self, url) -> None:
+        backend = self.obs.query_backend
+        if backend is None:
+            self._reply(404, b"no query backend attached\n",
+                        "text/plain; charset=utf-8")
+            return
+        op = url.path[len("/query/"):]
+        if op == "stats":
+            self._reply(200, json.dumps(backend.stats()).encode(),
+                        "application/json")
+            return
+        qs = parse_qs(url.query)
+        try:
+            vertices = ([int(x) for x in qs["v"][0].split(",") if x]
+                        if "v" in qs else None)
+            k = int(qs["k"][0]) if "k" in qs else None
+            t = float(qs["t"][0]) if "t" in qs else None
+        except ValueError as exc:
+            self._reply(400, json.dumps({"op": op, "ok": False,
+                                         "error": f"bad query arg: {exc}"}
+                                        ).encode(), "application/json")
+            return
+        out = backend.handle_query(op, vertices=vertices, k=k, t=t)
+        if out.get("ok"):
+            code = 200
+        elif "draining" in out.get("error", ""):
+            code = 503
+        else:
+            code = 400
+        self._reply(code, json.dumps(out).encode(), "application/json")
 
     def _reply(self, code: int, body: bytes, ctype: str) -> None:
         self.send_response(code)
@@ -81,7 +124,12 @@ class ObsHTTPServer:
     def __init__(self, port: int = 0, host: str = "127.0.0.1",
                  registries=()):
         self._host = host
+        # guards the registry list and backend reference: scrapes run on
+        # per-connection threads while the main thread mounts late (the
+        # serve CLI starts the endpoint before jax init, then attaches)
+        self._lock = threading.Lock()
         self._registries: list[metrics.MetricsRegistry] = list(registries)
+        self._query_backend = None
         self._httpd = ThreadingHTTPServer((host, port), _Handler)
         self._httpd.daemon_threads = True
         self._httpd.obs = self  # type: ignore[attr-defined]
@@ -101,12 +149,29 @@ class ObsHTTPServer:
 
     def add_registry(self, registry: metrics.MetricsRegistry) -> None:
         """Also expose a non-default registry (e.g. KCoreServer.metrics)."""
-        if registry not in self._registries:
-            self._registries.append(registry)
+        with self._lock:
+            if registry not in self._registries:
+                self._registries.append(registry)
+
+    def attach_query_backend(self, backend) -> None:
+        """Mount a live-read backend for the ``/query/*`` routes.
+
+        Duck-typed: anything with ``handle_query(op, vertices, k, t) ->
+        dict`` and ``stats() -> dict`` — in practice the
+        ``ConcurrentKCoreServer`` from streaming/concurrent.py."""
+        with self._lock:
+            self._query_backend = backend
+
+    @property
+    def query_backend(self):
+        with self._lock:
+            return self._query_backend
 
     def render_metrics(self) -> str:
+        with self._lock:
+            registries = list(self._registries)
         parts = [metrics.to_prometheus()]
-        parts.extend(r.to_prometheus() for r in self._registries)
+        parts.extend(r.to_prometheus() for r in registries)
         return "".join(p if p.endswith("\n") or not p else p + "\n"
                        for p in parts)
 

@@ -10,16 +10,22 @@ This package layers dynamic-graph maintenance on top of it:
     and re-converge only the affected frontier (provably exact, typically a
     small fraction of the from-scratch message bill);
   * ``server`` — interleave update batches with batched core-number /
-    membership / max-k queries (the paper's million-client scenario).
+    membership / max-k queries (the paper's million-client scenario);
+  * ``concurrent`` — snapshot-isolated threaded front end: a read worker
+    pool answers from the last converged fixpoint (seqlock-published
+    immutable snapshots) while the single writer re-converges, with
+    graceful drain + warm-restart checkpointing.
 """
 
+from repro.streaming.concurrent import (ConcurrentKCoreServer, CoreSnapshot,
+                                        SnapshotBox)
 from repro.streaming.delta import (ChurnDelta, DeltaResult, EdgeBatch,
                                    PatchableCSR, apply_batch,
                                    canonical_edges, random_churn_batch)
 from repro.streaming.engine import (BatchResult, StreamingConfig,
                                     StreamingKCoreEngine, warm_start_seed)
-from repro.streaming.server import (CoreCheckpointRing, KCoreServer,
-                                    Request, Response)
+from repro.streaming.server import (AsofView, CoreCheckpointRing,
+                                    KCoreServer, Request, Response)
 
 __all__ = [
     "EdgeBatch",
@@ -34,7 +40,11 @@ __all__ = [
     "BatchResult",
     "warm_start_seed",
     "KCoreServer",
+    "ConcurrentKCoreServer",
+    "CoreSnapshot",
+    "SnapshotBox",
     "CoreCheckpointRing",
+    "AsofView",
     "Request",
     "Response",
 ]

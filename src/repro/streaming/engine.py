@@ -573,6 +573,13 @@ class StreamingKCoreEngine:
             "core": np.asarray(self.core, np.int32),
             "batches_applied": np.asarray(self.batches_applied, np.int64),
             "csr": self._csr.state_dict(),
+            # jit-shape high-water marks: not needed for correctness, but
+            # restoring them means a warm restart re-enters the stream at
+            # the steady-state program shapes instead of recompiling its
+            # way back up through every pow2 size
+            "arc_pad_hwm": np.asarray(self._arc_pad_hwm, np.int64),
+            "n_iters_hwm": np.asarray(self._n_iters_hwm, np.int64),
+            "shard_A_floor": np.asarray(self._shard_A_floor, np.int64),
         }
 
     @classmethod
@@ -605,9 +612,11 @@ class StreamingKCoreEngine:
         eng._graph_cache = None
         eng._slots_cache = None
         eng._live_cache = None
-        eng._arc_pad_hwm = _next_pow2(max(int(config.min_arc_capacity), 1))
-        eng._shard_A_floor = 0
-        eng._n_iters_hwm = 0
+        eng._arc_pad_hwm = max(
+            _next_pow2(max(int(config.min_arc_capacity), 1)),
+            int(np.asarray(state.get("arc_pad_hwm", 1))))
+        eng._shard_A_floor = int(np.asarray(state.get("shard_A_floor", 0)))
+        eng._n_iters_hwm = int(np.asarray(state.get("n_iters_hwm", 0)))
         eng.core = np.asarray(state["core"], np.int32)
         eng.init_result = None
         eng.batches_applied = int(np.asarray(state["batches_applied"]))

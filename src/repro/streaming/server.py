@@ -68,6 +68,47 @@ class Response:
     op: str
     payload: Any
     wall_s: float
+    # structured failure: a malformed request (bad vertex id, missing
+    # argument, unknown op) yields payload=None + this message instead of
+    # an exception — a worker pool must never die on a bad request, and a
+    # transport would marshal this field, not a traceback
+    error: str | None = None
+    # snapshot version the read was answered from (concurrent front end
+    # only; None for the sequential serve loop)
+    version: int | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+def _asof_lookup(times, cores, t: float) -> tuple[float, np.ndarray]:
+    """Shared as-of search over parallel (times, cores) sequences."""
+    if not times:
+        raise KeyError("no checkpoints retained")
+    i = int(np.searchsorted(np.asarray(times), float(t),
+                            side="right")) - 1
+    if i < 0:
+        raise KeyError(
+            f"t={t} predates the oldest retained boundary "
+            f"({times[0]}); increase the ring capacity")
+    return times[i], cores[i]
+
+
+@dataclasses.dataclass(frozen=True)
+class AsofView:
+    """Immutable as-of store: a frozen (times, cores) snapshot of a
+    CoreCheckpointRing. Core arrays are the ring's read-only copies, so
+    the view can be shared across reader threads freely."""
+
+    times: tuple[float, ...]
+    cores: tuple[np.ndarray, ...]
+
+    def __len__(self) -> int:
+        return len(self.times)
+
+    def asof(self, t: float) -> tuple[float, np.ndarray]:
+        return _asof_lookup(self.times, self.cores, t)
 
 
 class CoreCheckpointRing:
@@ -108,14 +149,42 @@ class CoreCheckpointRing:
 
     def asof(self, t: float) -> tuple[float, np.ndarray]:
         """(boundary_time, core) at the latest boundary <= t."""
-        if not self._times:
-            raise KeyError("no checkpoints retained")
-        i = int(np.searchsorted(self._times, float(t), side="right")) - 1
-        if i < 0:
-            raise KeyError(
-                f"t={t} predates the oldest retained boundary "
-                f"({self._times[0]}); increase the ring capacity")
-        return self._times[i], self._cores[i]
+        return _asof_lookup(self._times, self._cores, t)
+
+    def snapshot(self) -> "AsofView":
+        """Immutable view of the currently retained boundaries.
+
+        O(len) tuple copy of the (already read-only) snapshot references —
+        the concurrent server freezes one of these into each published
+        ``CoreSnapshot`` so as-of reads stay consistent with the core
+        vector they were flipped with, no matter how far the writer's ring
+        has advanced since."""
+        return AsofView(tuple(self._times), tuple(self._cores))
+
+    # ------------------------------------------------------------------ #
+    def state_dict(self) -> dict:
+        """Checkpointable pytree: boundary times (k,) + cores stacked to
+        (k, n). Fixed leaf COUNT regardless of occupancy, so a restore
+        target's structure never depends on how full the ring was."""
+        if self._cores:
+            cores = np.stack([np.asarray(c, np.int32) for c in self._cores])
+        else:
+            cores = np.zeros((0, 0), np.int32)
+        return {"times": np.asarray(self._times, np.float64), "cores": cores}
+
+    def load_state(self, state: dict) -> None:
+        """Restore retained boundaries in place (capacity is config)."""
+        times = np.asarray(state["times"], np.float64).reshape(-1)
+        cores = np.asarray(state["cores"], np.int32)
+        keep = min(times.shape[0], self.capacity)
+        times, cores = times[-keep:] if keep else times[:0], \
+            cores[-keep:] if keep else cores[:0]
+        self._times, self._cores = [], []
+        for t, core in zip(times.tolist(), cores):
+            snap = core.copy()
+            snap.setflags(write=False)
+            self._times.append(float(t))
+            self._cores.append(snap)
 
 
 class KCoreServer:
@@ -147,7 +216,8 @@ class KCoreServer:
         self.asof_ring = CoreCheckpointRing(asof_capacity)
         self.queries_served = 0
         self.clients_answered = 0     # total vertex ids answered
-        self.updates_applied = 0
+        self.errors_returned = 0      # malformed requests answered with
+        self.updates_applied = 0      # a structured error Response
         self.update_messages = 0
         self.update_rounds = 0
         self.query_wall_s = 0.0
@@ -162,6 +232,8 @@ class KCoreServer:
         for op in self.OPS:
             self.metrics.counter("server_requests_total", op=op)
             self.metrics.histogram("server_request_seconds", op=op)
+            self.metrics.counter("server_errors_total", op=op)
+        self.metrics.counter("server_errors_total", op="unknown")
 
     OPS = ("core", "in_kcore", "members", "max_k", "core_asof", "update",
            "advance_window")
@@ -201,11 +273,15 @@ class KCoreServer:
         ring). Returns (boundary_time, cores)."""
         if t is None:
             raise ValueError("core_asof requires t")
-        bt, core = self.asof_ring.asof(t)
         if vertices is None:
+            bt, core = self.asof_ring.asof(t)
             return bt, core
+        # ids are validated BEFORE the ring lookup: a bad request must not
+        # touch retained state at all (and in the concurrent front end,
+        # must fail before a snapshot is even acquired)
         v = np.asarray(vertices, np.int64).reshape(-1)
         self._check_ids(v)
+        bt, core = self.asof_ring.asof(t)
         return bt, core[v]
 
     def asof_boundaries(self) -> np.ndarray:
@@ -248,34 +324,74 @@ class KCoreServer:
         return ws
 
     # ---------------- request loop ------------------------------------- #
+    def validate(self, req: Request) -> np.ndarray | None:
+        """Validate a request BEFORE any state is touched.
+
+        Returns the normalized (int64, flat) vertex array for ops that
+        carry one, raising ValueError/IndexError/TypeError on a malformed
+        request. Centralised so every front end — the sequential ``serve``
+        loop here and the snapshot readers in streaming/concurrent.py —
+        rejects bad requests without acquiring a snapshot or mutating
+        anything.
+        """
+        if req.op not in self.OPS:
+            raise ValueError(f"unknown op {req.op!r}")
+        v = None
+        if req.op in ("core", "in_kcore", "core_asof"):
+            if req.vertices is None and req.op != "core_asof":
+                raise ValueError(f"{req.op} requires vertices")
+            if req.vertices is not None:
+                v = np.asarray(req.vertices, np.int64).reshape(-1)
+                self._check_ids(v)
+        if req.op in ("in_kcore", "members") and req.k is None:
+            raise ValueError(f"{req.op} requires k")
+        if req.op == "core_asof" and req.t is None:
+            raise ValueError("core_asof requires t")
+        if req.op == "update" and req.batch is None:
+            raise ValueError("update requires batch")
+        return v
+
     def serve(self, requests: Iterable[Request]) -> list[Response]:
         out = []
         for req in requests:
             t0 = time.perf_counter()
+            error = None
+            payload = None
             with _trace.span("serve.request", op=req.op):
-                if req.op == "core":
-                    payload = self.core_number(req.vertices)
-                    self.clients_answered += payload.size
-                elif req.op == "in_kcore":
-                    payload = self.in_kcore(req.vertices, req.k)
-                    self.clients_answered += payload.size
-                elif req.op == "members":
-                    payload = self.kcore_members(req.k)
-                elif req.op == "max_k":
-                    payload = self.max_k()
-                elif req.op == "core_asof":
-                    payload = self.core_asof(req.t, req.vertices)
-                    self.clients_answered += payload[1].size
-                elif req.op == "update":
-                    payload = self.update(req.batch)
-                else:
-                    raise ValueError(f"unknown op {req.op!r}")
+                try:
+                    self.validate(req)
+                    if req.op == "core":
+                        payload = self.core_number(req.vertices)
+                        self.clients_answered += payload.size
+                    elif req.op == "in_kcore":
+                        payload = self.in_kcore(req.vertices, req.k)
+                        self.clients_answered += payload.size
+                    elif req.op == "members":
+                        payload = self.kcore_members(req.k)
+                    elif req.op == "max_k":
+                        payload = self.max_k()
+                    elif req.op == "core_asof":
+                        payload = self.core_asof(req.t, req.vertices)
+                        self.clients_answered += payload[1].size
+                    else:   # update (validate() rejected every other op)
+                        payload = self.update(req.batch)
+                except (ValueError, IndexError, KeyError, TypeError) as exc:
+                    # malformed request -> structured error Response; a
+                    # request must never raise through the serving loop
+                    # (or, concurrently, through the worker pool)
+                    error = str(exc)
+                    self.errors_returned += 1
+                    op = req.op if req.op in self.OPS else "unknown"
+                    self.metrics.counter("server_errors_total", op=op).inc()
             dt = time.perf_counter() - t0
-            if req.op != "update":      # update() already tracks its wall
+            if error is None and req.op != "update":
+                # update() already tracks its wall; errors are counted
+                # separately so latency histograms stay reads-only
                 self.queries_served += 1
                 self.query_wall_s += dt
                 self._observe(req.op, dt)
-            out.append(Response(op=req.op, payload=payload, wall_s=dt))
+            out.append(Response(op=req.op, payload=payload, wall_s=dt,
+                                error=error))
         return out
 
     def latency(self) -> dict:
@@ -299,6 +415,7 @@ class KCoreServer:
             "max_k": self.max_k(),
             "queries_served": self.queries_served,
             "clients_answered": self.clients_answered,
+            "errors_returned": self.errors_returned,
             "updates_applied": self.updates_applied,
             "update_messages": self.update_messages,
             "update_rounds": self.update_rounds,
@@ -307,3 +424,46 @@ class KCoreServer:
             "asof_boundaries": len(self.asof_ring),
             "latency": self.latency(),
         }
+
+    # ---------------- warm restart ------------------------------------- #
+    def state_dict(self) -> dict:
+        """Checkpointable pytree of everything a warm restart needs.
+
+        Windowed mode captures the full windowed engine (inner streaming
+        engine + window cursor); static mode the streaming engine alone.
+        The as-of ring rides along so historical ``core_asof`` boundaries
+        survive a restart. Counters/latency are NOT state — a restarted
+        server reports fresh telemetry. Feed to
+        ``repro.checkpoint.save_checkpoint``; restore onto a compatibly
+        CONSTRUCTED server with ``load_state_dict`` (config, mode, and
+        mesh are construction arguments, not state).
+        """
+        if self.windowed is not None:
+            state = {"windowed": self.windowed.state_dict()}
+        else:
+            state = {"engine": self.engine.state_dict()}
+        state["asof"] = self.asof_ring.state_dict()
+        return state
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore ``state_dict`` output in place (same serving mode).
+
+        The restored cores ARE the fixpoint of the restored CSR, so no
+        decomposition runs — the server resumes the stream exactly where
+        the checkpointed one stopped (continuation is bit-equal in cores
+        AND message bills; tested in tests/test_concurrent_serving.py).
+        """
+        if self.windowed is not None:
+            if "windowed" not in state:
+                raise ValueError("checkpoint was taken from a static "
+                                 "server; this one is windowed")
+            self.windowed.load_state_dict(state["windowed"])
+            self.engine = self.windowed.engine
+        else:
+            if "engine" not in state:
+                raise ValueError("checkpoint was taken from a windowed "
+                                 "server; this one is static")
+            self.engine = StreamingKCoreEngine.from_state_dict(
+                state["engine"], config=self.engine.config,
+                mesh=self.engine.mesh, axis_names=self.engine.axis_names)
+        self.asof_ring.load_state(state["asof"])

@@ -166,6 +166,39 @@ class WindowedKCoreEngine:
         return self._t_hi > self.log.t_max
 
     # ------------------------------------------------------------------ #
+    def state_dict(self) -> dict:
+        """Checkpointable pytree: inner engine state + window position.
+
+        The EventLog itself is NOT captured — it is an input, deterministic
+        from its source (path or generator spec + seed), and typically far
+        larger than the engine state. A restore therefore needs the same
+        log the checkpointed run was replaying (kcore_serve rebuilds it
+        from the --events spec) and resumes the replay in lockstep:
+        identical window batches, cores, and message bills.
+        """
+        return {
+            "engine": self.engine.state_dict(),
+            "hi": np.asarray(self._hi, np.int64),
+            "t_hi": np.asarray(self._t_hi, np.float64),
+            "edges": np.asarray(self._edges, np.int64),
+            "steps_taken": np.asarray(self.steps_taken, np.int64),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore ``state_dict`` output in place, onto the same log and
+        window geometry this engine was constructed with. No decomposition
+        runs — the restored cores are the fixpoint of the restored CSR."""
+        self.engine = StreamingKCoreEngine.from_state_dict(
+            state["engine"], config=self.config,
+            mesh=self.engine.mesh, axis_names=self.engine.axis_names)
+        self._hi = int(np.asarray(state["hi"]))
+        self._t_hi = float(np.asarray(state["t_hi"]))
+        edges = np.array(np.asarray(state["edges"]), np.int64).reshape(-1, 2)
+        edges.setflags(write=False)
+        self._edges = edges
+        self.steps_taken = int(np.asarray(state["steps_taken"]))
+
+    # ------------------------------------------------------------------ #
     def window_graph(self) -> Graph:
         """Materialize the current window graph independently of the
         engine (oracle/verification path — O(w log w))."""

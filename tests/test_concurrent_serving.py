@@ -1,0 +1,373 @@
+"""Snapshot-isolated concurrent serving: isolation, drain, warm restart.
+
+The contracts under test (streaming/concurrent.py + server state_dict):
+
+  * old-or-new-never-torn: readers hammering during flips — including a
+    flip artificially held open mid-publication — always see ONE complete
+    published fixpoint, bit-equal to the registered snapshot of the
+    version they report;
+  * structured errors through the pool: a malformed read comes back as an
+    error Response, never an exception, and the pool stays alive;
+  * drain → checkpoint → restore: a drained server's checkpoint loads
+    into a fresh process-equivalent server which continues the replay in
+    LOCKSTEP — bit-equal cores and message bills to an uninterrupted run
+    (the warm-restart acceptance);
+  * /metrics scrapes and /query reads stay coherent while flips and
+    updates run concurrently (obs/http.py thread safety).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import bz_core_numbers
+from repro.graph import generators as gen
+from repro.streaming import (ConcurrentKCoreServer, KCoreServer, Request,
+                             SnapshotBox, StreamingConfig,
+                             random_churn_batch)
+from repro.streaming.concurrent import CoreSnapshot
+from repro.temporal import WindowedKCoreEngine, temporal_barabasi_albert
+
+
+def _static_front(n=200, seed=0, workers=4, **kw):
+    g = gen.barabasi_albert(n, 3, seed=seed)
+    return ConcurrentKCoreServer(KCoreServer(g), read_workers=workers, **kw)
+
+
+def _windowed_server(n=250, seed=1, ticks=8):
+    log = temporal_barabasi_albert(n, 3, seed=seed, remove_frac=0.1)
+    stride = max(len(log) // (ticks + 2), 1)
+    weng = WindowedKCoreEngine(log, 3 * stride, stride, by="count")
+    return KCoreServer(windowed=weng, asof_capacity=ticks + 2)
+
+
+# ---------------------------------------------------------------------- #
+# seqlock / snapshot isolation
+# ---------------------------------------------------------------------- #
+
+class _SlowBox(SnapshotBox):
+    """A SnapshotBox whose publication window is held open: version goes
+    odd, then the snapshot swap waits, then even. Readers entering during
+    the window MUST spin — returning would hand them a torn flip."""
+
+    hold_s = 0.02
+
+    def publish(self, snap):
+        with self._write_lock:
+            self._version += 1
+            time.sleep(self.hold_s)          # flip held open mid-publication
+            self._snap = snap
+            time.sleep(self.hold_s)
+            self._version += 1
+            self.flips += 1
+
+
+def test_seqlock_readers_never_see_mid_flip_state():
+    box = _SlowBox()
+    core0 = np.arange(5, dtype=np.int32)
+    snaps = [CoreSnapshot(version=i, core=core0 + i, n=5, m=0, max_k=0,
+                          asof=None, batches_applied=i, t_hi=None,
+                          published_at=time.perf_counter())
+             for i in range(1, 4)]
+    box.publish(snaps[0])
+
+    stop = threading.Event()
+    seen, errs = [], []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                s = box.read()
+                # a complete snapshot is self-consistent: core == core0 + v
+                assert (s.core == core0 + s.version).all()
+                seen.append(s.version)
+        except AssertionError as exc:        # pragma: no cover - failure
+            errs.append(exc)
+
+    threads = [threading.Thread(target=reader, daemon=True)
+               for _ in range(4)]
+    for th in threads:
+        th.start()
+    for s in snaps[1:]:
+        box.publish(s)                       # each flip held open ~40ms
+    stop.set()
+    for th in threads:
+        th.join(timeout=10)
+    assert not errs
+    assert set(seen) <= {1, 2, 3} and len(seen) > 0
+    # readers overlapped the held-open flips, so every version was observed
+    assert max(seen) == 3
+
+
+def test_hammer_reads_during_updates_are_bit_equal_to_a_fixpoint():
+    front = _static_front(n=300, seed=2)
+    registry = {front.snapshot.version: front.snapshot}
+    rng = np.random.default_rng(0)
+    stop = threading.Event()
+    checked, errs = [0], []
+
+    def reader(seed):
+        r = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                v = r.integers(0, 300, size=16)
+                resp = front.read(Request(op="core", vertices=v))
+                assert resp.ok
+                snap = registry[resp.version]
+                assert (resp.payload == snap.core[v]).all(), "torn read"
+                checked[0] += 1
+        except Exception as exc:             # pragma: no cover - failure
+            errs.append(exc)
+
+    threads = [threading.Thread(target=reader, args=(10 + i,), daemon=True)
+               for i in range(4)]
+    for th in threads:
+        th.start()
+    for _ in range(6):
+        b = random_churn_batch(front.server.engine.graph, 10, 10, rng)
+        front.update(b)
+        snap = front.snapshot
+        registry[snap.version] = snap
+        # every published fixpoint is the oracle's (reads are BZ-anchored)
+        ref = bz_core_numbers(front.server.engine.graph)
+        assert (snap.core == ref).all()
+    stop.set()
+    for th in threads:
+        th.join(timeout=10)
+    assert not errs and checked[0] > 0
+    assert front.box.flips == 7
+
+
+def test_snapshot_survives_engine_churn():
+    front = _static_front(n=150, seed=3)
+    snap = front.snapshot
+    before = snap.core.copy()
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        front.update(random_churn_batch(front.server.engine.graph,
+                                        15, 15, rng))
+    assert (snap.core == before).all()       # old snapshot is immutable
+    assert not snap.core.flags.writeable
+    assert front.snapshot.version == snap.version + 3
+
+
+# ---------------------------------------------------------------------- #
+# structured errors + drain through the worker pool
+# ---------------------------------------------------------------------- #
+
+def test_pool_reads_return_structured_errors_and_stay_alive():
+    front = _static_front(n=50, seed=4, workers=2)
+    out = front.serve_concurrent([
+        Request(op="core", vertices=[0, 1]),
+        Request(op="core", vertices=[999]),          # bad id
+        Request(op="in_kcore", vertices=[0]),        # missing k
+        Request(op="nope"),                          # unknown op
+        Request(op="update"),                        # write via read path
+        Request(op="core", vertices=[2]),            # pool still serving
+    ])
+    assert out[0].ok and out[5].ok
+    assert [not r.ok for r in out[1:5]] == [True] * 4
+    assert "out of range" in out[1].error
+    assert "requires k" in out[2].error
+    assert "not a read" in out[4].error
+    # errors are rejected before snapshot acquisition: no version tag
+    assert all(r.version is None for r in out[1:5])
+    assert all(r.version == front.snapshot.version for r in (out[0], out[5]))
+
+
+def test_drain_refuses_new_reads_and_is_idempotent(tmp_path):
+    front = _static_front(n=60, seed=5,
+                          checkpoint_dir=str(tmp_path / "ck"))
+    assert front.read(Request(op="max_k")).ok
+    path = front.drain(save=True, step=7)
+    assert path and path.endswith("step_000000007")
+    with pytest.raises(RuntimeError, match="draining"):
+        front.submit_read(Request(op="max_k"))
+    assert front.drain(save=True, step=7)            # idempotent
+
+
+# ---------------------------------------------------------------------- #
+# warm restart: drain -> checkpoint -> restore -> lockstep continuation
+# ---------------------------------------------------------------------- #
+
+def _advance_bills(server, ticks):
+    """Advance a windowed server; return the exact per-tick evidence."""
+    rows = []
+    for _ in range(ticks):
+        ws = server.advance_window()
+        rows.append((ws.m, int(ws.result.total_messages),
+                     int(ws.result.rounds), ws.result.core.tobytes()))
+    return rows
+
+
+def test_windowed_drain_checkpoint_resumes_in_lockstep(tmp_path):
+    from repro.checkpoint import restore_checkpoint
+
+    # uninterrupted reference: 6 window advances
+    ref = _advance_bills(_windowed_server(), 6)
+
+    # interrupted run: 3 advances under concurrent read load, then drain
+    srv_a = _windowed_server()
+    front = ConcurrentKCoreServer(srv_a, read_workers=2,
+                                  checkpoint_dir=str(tmp_path))
+    first = []
+    for _ in range(3):
+        ws = front.advance_window()
+        front.serve_concurrent([Request(op="max_k"),
+                                Request(op="core", vertices=[0, 1, 2])])
+        first.append((ws.m, int(ws.result.total_messages),
+                      int(ws.result.rounds), ws.result.core.tobytes()))
+    path = front.drain(save=True, step=3)
+    assert path
+
+    # fresh server (new engine, new log replayed from the same spec)
+    srv_b = _windowed_server()
+    state, step = restore_checkpoint(tmp_path, like=srv_b.state_dict())
+    assert step == 3
+    srv_b.load_state_dict(state)
+    assert (srv_b.core == srv_a.core).all()
+    assert len(srv_b.asof_ring) == len(srv_a.asof_ring)
+    rest = _advance_bills(srv_b, 3)
+
+    # bit-equal continuation: cores AND message bills match the
+    # uninterrupted run tick for tick
+    assert first + rest == ref
+
+
+def test_static_state_dict_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    g = gen.barabasi_albert(120, 3, seed=6)
+    srv_a = KCoreServer(g, StreamingConfig(frontier="compact"))
+    rng = np.random.default_rng(7)
+    srv_a.update(random_churn_batch(srv_a.engine.graph, 20, 10, rng))
+    srv_a.asof_ring.push(1.0, srv_a.core)
+    srv_a.asof_ring.push(2.0, srv_a.core)
+    save_checkpoint(tmp_path, 1, srv_a.state_dict())
+
+    srv_b = KCoreServer(g, StreamingConfig(frontier="compact"))
+    state, _ = restore_checkpoint(tmp_path, like=srv_b.state_dict())
+    srv_b.load_state_dict(state)
+    assert (srv_b.core == srv_a.core).all()
+    assert srv_b.asof_ring.times.tolist() == [1.0, 2.0]
+    bt, core = srv_b.core_asof(1.5)
+    assert bt == 1.0 and (core == srv_a.asof_ring.asof(1.5)[1]).all()
+
+    # identical continuation from the restored CSR
+    batch = random_churn_batch(srv_a.engine.graph, 10, 10,
+                               np.random.default_rng(8))
+    ra, rb = srv_a.update(batch), srv_b.update(batch)
+    assert (ra.core == rb.core).all()
+    assert ra.total_messages == rb.total_messages
+
+
+def test_mode_mismatch_checkpoints_are_rejected():
+    static = KCoreServer(gen.cycle(10))
+    windowed = _windowed_server()
+    with pytest.raises(ValueError, match="windowed"):
+        static.load_state_dict(windowed.state_dict())
+    with pytest.raises(ValueError, match="static"):
+        windowed.load_state_dict(static.state_dict())
+
+
+# ---------------------------------------------------------------------- #
+# obs/http.py under concurrent serving
+# ---------------------------------------------------------------------- #
+
+def _get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=5) as resp:
+            return resp.status, resp.read()
+    except urllib.error.HTTPError as err:
+        return err.code, err.read()
+
+
+def test_metrics_scrapes_and_queries_during_flips():
+    from repro.obs.http import start_server
+
+    front = _static_front(n=200, seed=9)
+    httpd = start_server(port=0)
+    try:
+        httpd.add_registry(front.server.metrics)
+        httpd.attach_query_backend(front)
+        stop = threading.Event()
+        errs = []
+
+        def scraper():
+            try:
+                while not stop.is_set():
+                    code, body = _get(httpd.url + "/metrics")
+                    assert code == 200
+                    assert b"kcore_snapshot_flips_total" in body
+                    code, body = _get(httpd.url + "/query/core?v=0,1,2")
+                    assert code == 200
+                    out = json.loads(body)
+                    assert out["ok"] and len(out["payload"]) == 3
+            except Exception as exc:         # pragma: no cover - failure
+                errs.append(exc)
+
+        threads = [threading.Thread(target=scraper, daemon=True)
+                   for _ in range(3)]
+        for th in threads:
+            th.start()
+        rng = np.random.default_rng(2)
+        for _ in range(5):
+            front.update(random_churn_batch(front.server.engine.graph,
+                                            10, 10, rng))
+        stop.set()
+        for th in threads:
+            th.join(timeout=10)
+        assert not errs
+
+        # structured HTTP errors from the same routes
+        code, body = _get(httpd.url + "/query/core?v=99999")
+        assert code == 400 and b"out of range" in body
+        code, _ = _get(httpd.url + "/query/nope")
+        assert code == 400
+        code, body = _get(httpd.url + "/query/stats")
+        assert code == 200
+        assert json.loads(body)["snapshot_flips"] == 6
+
+        front.drain(save=False)
+        code, body = _get(httpd.url + "/query/max_k")
+        assert code == 503 and b"draining" in body
+    finally:
+        httpd.stop()
+
+
+def test_query_routes_404_without_backend():
+    from repro.obs.http import start_server
+
+    httpd = start_server(port=0)
+    try:
+        code, body = _get(httpd.url + "/query/max_k")
+        assert code == 404 and b"no query backend" in body
+    finally:
+        httpd.stop()
+
+
+def test_flight_records_snapshot_flip_events():
+    from repro.obs import flight
+
+    flight.enable()
+    flight.reset()
+    try:
+        front = _static_front(n=80, seed=11)
+        front.update(random_churn_batch(front.server.engine.graph, 5, 5,
+                                        np.random.default_rng(3)))
+        evs = flight.get_recorder().events()
+        flips = [e for e in evs if e["kind"] == "snapshot_flip"]
+        assert [e["version"] for e in flips] == [1, 2]
+        assert flips[-1]["max_k"] == front.snapshot.max_k
+        payload = flight.to_json()
+        assert payload["events"][-1]["kind"] == "snapshot_flip"
+    finally:
+        flight.disable()
+        flight.reset()

@@ -63,6 +63,39 @@ def test_added_registry_is_rendered(server):
     assert text.count('side_registry_total{op="core"} 1.0') == 1
 
 
+def test_concurrent_scrapes_while_registries_are_added(server):
+    """/metrics scrapes run on per-connection threads; mounting registries
+    from the main thread mid-scrape must never produce an error or a torn
+    render (the registry list is copied under the server lock)."""
+    import threading
+
+    stop = threading.Event()
+    errs: list[Exception] = []
+
+    def scrape():
+        try:
+            while not stop.is_set():
+                code, _, body = _get(server.url + "/metrics")
+                assert code == 200 and body is not None
+        except Exception as exc:             # pragma: no cover - failure
+            errs.append(exc)
+
+    threads = [threading.Thread(target=scrape, daemon=True)
+               for _ in range(3)]
+    for th in threads:
+        th.start()
+    for i in range(20):
+        reg = MetricsRegistry()
+        reg.counter(f"late_registry_{i}_total").inc()
+        server.add_registry(reg)
+    stop.set()
+    for th in threads:
+        th.join(timeout=10)
+    assert not errs
+    text = _get(server.url + "/metrics")[2].decode()
+    assert "late_registry_19_total 1.0" in text
+
+
 def test_healthz_ok_then_503_on_anomaly(server):
     health.reset()
     try:

@@ -265,7 +265,19 @@ def test_server_queries_and_updates():
 
 def test_server_rejects_bad_ids():
     srv = KCoreServer(gen.cycle(10))
+    # direct methods raise (library API) ...
     with pytest.raises(IndexError):
         srv.core_number([10])
-    with pytest.raises(ValueError):
-        srv.serve([Request(op="nope")])
+    # ... but the request loop answers a structured error Response: a bad
+    # request must never raise through a serving front end, and it must be
+    # rejected before touching any state
+    out = srv.serve([Request(op="nope"),
+                     Request(op="core", vertices=[10]),
+                     Request(op="in_kcore", vertices=[0]),       # missing k
+                     Request(op="core", vertices=[0])])
+    assert not out[0].ok and "unknown op" in out[0].error
+    assert not out[1].ok and out[1].payload is None
+    assert not out[2].ok and "requires k" in out[2].error
+    assert out[3].ok and out[3].payload.tolist() == [2]
+    assert srv.errors_returned == 3
+    assert srv.stats()["queries_served"] == 1     # errors aren't queries

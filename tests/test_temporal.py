@@ -327,9 +327,11 @@ def test_server_windowed_replay_and_asof_queries():
     # direct updates would desync the window's edge-set bookkeeping
     with pytest.raises(ValueError):
         srv.update(EdgeBatch.make(insert=[(0, 1)]))
-    with pytest.raises(ValueError):
-        srv.serve([Request(op="update",
-                           batch=EdgeBatch.make(insert=[(0, 1)]))])
+    # through the request loop the same misuse comes back as a structured
+    # error Response (front ends must never die on a bad request)
+    [resp] = srv.serve([Request(op="update",
+                                batch=EdgeBatch.make(insert=[(0, 1)]))])
+    assert not resp.ok and "advance_window" in resp.error
 
 
 # ---------------------------------------------------------------------- #
